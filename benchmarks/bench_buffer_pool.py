@@ -1,0 +1,27 @@
+"""Paper Fig. 14: sensitivity to buffer pool size (1%..16% of the graph):
+ACGraph must stay flat — block reuse makes it insensitive beyond a small
+threshold.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, make_engine, ssd
+from repro.algorithms import run_bfs, run_wcc
+
+
+def main() -> None:
+    model = ssd()
+    for name, fn, sym in (("bfs", lambda e, h: run_bfs(e, h, 0), False),
+                          ("wcc", run_wcc, True)):
+        g = bench_graph(scale=12, symmetric=sym)
+        for frac in (0.01, 0.02, 0.04, 0.08, 0.16):
+            eng, hg = make_engine(g, pool_slots=0, trace=False)
+            slots = max(4, int(hg.num_blocks * frac))
+            eng2, hg2 = make_engine(g, pool_slots=slots)
+            _, m = fn(eng2, hg2)
+            emit(f"fig14_{name}_buf{int(frac*100):02d}pct", 0.0,
+                 f"modeled_{model.modeled_runtime(m)*1e3:.2f}ms_io_"
+                 f"{m.io_blocks}blk")
+
+
+if __name__ == "__main__":
+    main()

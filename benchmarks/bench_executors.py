@@ -1,0 +1,26 @@
+"""Paper Fig. 16: scaling with worker threads — executor lanes 1..16;
+modeled compute scales with lanes while the I/O pipeline stays saturated.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, make_engine
+from repro.algorithms import run_wcc
+from repro.io_sim.ssd_model import SSDModel
+
+
+def main() -> None:
+    g = bench_graph(scale=12, symmetric=True)
+    base = None
+    for lanes in (1, 2, 4, 8, 16):
+        eng, hg = make_engine(g, lanes=lanes)
+        _, m = run_wcc(eng, hg)
+        model = SSDModel(lanes=lanes)
+        rt = max(m.ticks, 1)  # scheduler ticks ~ critical path length
+        base = base or rt
+        emit(f"fig16_wcc_lanes{lanes:02d}", 0.0,
+             f"ticks_{m.ticks}_speedup_{base/rt:.2f}x_modeled_"
+             f"{model.modeled_runtime(m)*1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 10: read inflation — average I/O bytes per accessed edge
+(theoretical minimum 4 bytes) for BFS and SSPPR, async vs sync.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, make_engine
+from repro.algorithms import run_bfs, run_ppr
+
+
+def main() -> None:
+    g = bench_graph(scale=12)
+    for name, fn in (("bfs", lambda e, h: run_bfs(e, h, 0)),
+                     ("ssppr", lambda e, h: run_ppr(e, h, 0,
+                                                    r_max=1e-5))):
+        for mode in ("async", "sync"):
+            eng, hg = make_engine(g, sync=(mode == "sync"), pool_slots=48)
+            _, m = fn(eng, hg)
+            emit(f"fig10_{name}_{mode}", 0.0,
+                 f"{m.bytes_per_edge():.2f}_bytes_per_edge")
+
+
+if __name__ == "__main__":
+    main()

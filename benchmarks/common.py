@@ -1,0 +1,54 @@
+"""Shared benchmark fixtures: graphs, engines, CSV emission.
+
+Output convention (benchmarks/run.py): one CSV line per measurement —
+``name,us_per_call,derived`` where ``derived`` is the figure's own metric
+(bytes/edge, GB, speedup, ...). Runtime figures additionally report the
+SSD-model wall-clock (Sec. 6 hardware: 6 GB/s device), labeled *modeled*;
+I/O volumes and edge counts are exact engine counters.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import Engine, EngineConfig
+from repro.io_sim.ssd_model import SSDModel
+from repro.storage.csr import CSRGraph, symmetrize
+from repro.storage.hybrid import build_hybrid
+from repro.storage.rmat import rmat_graph
+
+BLOCK_EDGES = 256   # smaller blocks -> richer scheduling at bench scale
+
+
+def bench_graph(scale: int = 12, avg_degree: int = 16, seed: int = 0,
+                symmetric: bool = False) -> CSRGraph:
+    g = rmat_graph(scale=scale, avg_degree=avg_degree, seed=seed)
+    return symmetrize(g) if symmetric else g
+
+
+def make_engine(g: CSRGraph, *, sync: bool = False, pool_slots: int = 64,
+                lanes: int = 4, partitioner: str = "lplf",
+                delta_deg: int = 2, block_edges: int = BLOCK_EDGES,
+                trace: bool = False, cached_policy: str = "fifo",
+                chunk_size: int = 128):
+    hg = build_hybrid(g, delta_deg=delta_deg, partitioner=partitioner,
+                      block_edges=block_edges)
+    cfg = EngineConfig(lanes=lanes, prefetch=8, queue_depth=16,
+                       pool_slots=pool_slots, chunk_size=chunk_size,
+                       sync=sync, trace=trace, cached_policy=cached_policy)
+    return Engine(hg, cfg), hg
+
+
+def ssd() -> SSDModel:
+    return SSDModel(bandwidth_gbps=6.0, lanes=4)
+
+
+def emit(name: str, seconds: float, derived) -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,54 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Run with:
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig2_cache_policies", "benchmarks.bench_cache_policies"),
+    ("fig8_runtime", "benchmarks.bench_runtime"),
+    ("fig9_memory", "benchmarks.bench_memory"),
+    ("fig10_read_inflation", "benchmarks.bench_read_inflation"),
+    ("fig11_work_inflation", "benchmarks.bench_work_inflation"),
+    ("fig3_12_throughput", "benchmarks.bench_throughput"),
+    ("fig13_mis", "benchmarks.bench_mis"),
+    ("fig14_buffer_pool", "benchmarks.bench_buffer_pool"),
+    ("fig15_degree_threshold", "benchmarks.bench_degree_threshold"),
+    ("fig16_executors", "benchmarks.bench_executors"),
+    ("table2_partitioner", "benchmarks.bench_partitioner"),
+    ("fig17_skew", "benchmarks.bench_skew"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated substrings to select benchmarks")
+    args = ap.parse_args()
+    sel = [s for s in args.only.split(",") if s]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if sel and not any(s in name for s in sel):
+            continue
+        t0 = time.time()
+        try:
+            __import__(mod, fromlist=["main"]).main()
+            print(f"# {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:                                  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

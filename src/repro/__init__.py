@@ -1,0 +1,14 @@
+"""repro — ACGraph (SIGMOD'25) reproduced as a JAX/TPU framework.
+
+Layers:
+  core/        block-centric asynchronous execution engine (the paper's core)
+  storage/     hybrid graph storage (LPLF partition, virtual vertices, mini lists)
+  algorithms/  BFS, WCC, k-core, PPR, PR, MIS on the engine
+  io_sim/      asynchronous I/O pipeline + SSD performance model
+  kernels/     Pallas TPU kernels (frontier relax, flash/paged attention)
+  models/      LM substrate for the assigned architecture pool
+  configs/     architecture configs (full + reduced smoke variants)
+  launch/      production mesh, multi-pod dry-run, roofline, train/serve
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,11 @@
+from repro.algorithms.bfs import bfs_algorithm, run_bfs
+from repro.algorithms.wcc import wcc_algorithm, run_wcc
+from repro.algorithms.kcore import kcore_algorithm, run_kcore
+from repro.algorithms.ppr import ppr_algorithm, run_ppr, run_pagerank
+from repro.algorithms.mis import run_mis
+
+__all__ = [
+    "bfs_algorithm", "run_bfs", "wcc_algorithm", "run_wcc",
+    "kcore_algorithm", "run_kcore", "ppr_algorithm", "run_ppr",
+    "run_pagerank", "run_mis",
+]

@@ -1,0 +1,45 @@
+"""Breadth-First Search on ACGraph (paper Alg. 2).
+
+apply(u) returns dis[u]; propagation relaxes dis[v] <- min(dis[v], msg+1)
+via an atomic CAS loop in the paper — here the batched min-combiner, which
+is the same commutative monoid. A vertex activates when its distance
+improves; its scheduling priority is -dis (smaller distance first), the
+paper's "vertex distance as the priority metric".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Algorithm
+from repro.core.engine import Engine, Metrics
+from repro.storage.hybrid import HybridGraph
+
+INF32 = np.int32(2 ** 30)
+
+
+def bfs_algorithm() -> Algorithm:
+    return Algorithm(
+        name="bfs",
+        key="dis",
+        combine="min",
+        apply=lambda st, vids, mask, deg: jnp.where(
+            mask, st["dis"][vids], INF32),
+        edge_value=lambda msg: jnp.where(msg < INF32, msg + 1, INF32),
+        activated=lambda old, new, deg: new < old,
+        priority=lambda st, deg: (-st["dis"]).astype(jnp.int32),
+        on_process=None,
+    )
+
+
+def run_bfs(engine: Engine, hg: HybridGraph, source: int
+            ) -> tuple[np.ndarray, Metrics]:
+    """Returns distances indexed by ORIGINAL vertex id (INF = unreached)."""
+    src_new = int(hg.v2id[source])
+    assert src_new >= 0
+    dis0 = np.full(engine.V, INF32, dtype=np.int32)
+    dis0[src_new] = 0
+    front0 = np.zeros(engine.V, dtype=bool)
+    front0[src_new] = True
+    state, metrics, _ = engine.run(bfs_algorithm(), front0, {"dis": dis0})
+    return np.asarray(state["dis"])[hg.v2id], metrics

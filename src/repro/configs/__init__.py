@@ -1,0 +1,50 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+All 10 assigned architectures plus the paper's own graph-engine config.
+Select with ``--arch <id>`` in the launch scripts.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, LayerSpec, ShapeSpec, SHAPES,
+                                shrink_for_smoke)
+
+_MODULES = {
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout",
+    "internvl2-26b": "internvl2_26b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "whisper-small": "whisper_small",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return shrink_for_smoke(get_config(name))
+
+
+def expected_layers(name: str) -> int:
+    return {"starcoder2-3b": 30, "qwen1.5-32b": 64, "qwen2.5-14b": 48,
+            "gemma3-4b": 34, "qwen2-moe-a2.7b": 24,
+            "llama4-scout-17b-a16e": 48, "internvl2-26b": 48,
+            "xlstm-1.3b": 48, "jamba-1.5-large-398b": 72,
+            "whisper-small": 12}[name]
+
+
+__all__ = ["ArchConfig", "LayerSpec", "ShapeSpec", "SHAPES", "ARCH_NAMES",
+           "get_config", "get_smoke_config", "expected_layers",
+           "shrink_for_smoke"]

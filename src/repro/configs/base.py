@@ -1,0 +1,128 @@
+"""Architecture config schema + input shape definitions.
+
+Layer layouts are expressed as repeating *units* (scanned, parameters
+stacked on the repeat axis) plus an optional unrolled *tail* — this is how
+heterogeneous patterns (gemma3's 5:1 local:global, jamba's 1:7
+attn:mamba with alternating MoE) compile to compact scanned HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: Literal["attn", "mamba", "mlstm", "slstm"] = "attn"
+    attn: Literal["global", "local"] = "global"
+    ffn: Literal["dense", "moe", "none"] = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | vlm | ssm | hybrid | audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    unit: tuple[LayerSpec, ...]
+    unit_repeat: int
+    tail: tuple[LayerSpec, ...] = ()
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    local_window: int = 4096
+    # ffn
+    act: str = "silu"
+    ffn_gated: bool = True
+    norm_eps: float = 1e-6
+    # moe
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared: int = 0
+    moe_d_ff: int = 0
+    # ssm (mamba)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # xlstm
+    xlstm_expand: int = 2
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    enc_seq: int = 1500
+    # vlm stub frontend
+    num_patches: int = 0
+    # misc
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    subquadratic: bool = False        # can run long_500k
+    # memory-discipline knobs (see EXPERIMENTS.md §Perf for tuning)
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    loss_chunk: int = 512
+    mamba_chunk: int = 64
+    mlstm_chunk: int = 128
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.unit) * self.unit_repeat + len(self.tail)
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def dense_unit(n: int, ffn: str = "dense") -> tuple[tuple[LayerSpec, ...],
+                                                    int]:
+    return (LayerSpec(kind="attn", ffn=ffn),), n
+
+
+def shrink_for_smoke(cfg: ArchConfig) -> ArchConfig:
+    """Reduced config of the same family for CPU smoke tests: same layer
+    layout/unit structure, tiny dims. The FULL config is exercised only via
+    the dry-run (ShapeDtypeStruct, no allocation)."""
+    kv = max(1, min(cfg.num_kv_heads, 2))
+    H = max(kv, min(cfg.num_heads, 4))
+    H = (H // kv) * kv or kv
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        d_model=128, num_heads=H, num_kv_heads=kv, head_dim=32,
+        d_ff=0 if cfg.d_ff == 0 else 256, vocab=512,
+        unit_repeat=min(cfg.unit_repeat, 2), tail=cfg.tail[:2],
+        moe_experts=min(cfg.moe_experts, 8) if cfg.moe_experts else 0,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        moe_shared=min(cfg.moe_shared, 1),
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        enc_seq=16 if cfg.encoder_layers else cfg.enc_seq,
+        num_patches=4 if cfg.num_patches else 0,
+        attn_q_chunk=64, attn_kv_chunk=64, loss_chunk=64,
+        mamba_chunk=16, mlstm_chunk=16,
+        ssm_state=8, local_window=32, dtype="float32")

@@ -1,0 +1,21 @@
+"""Gemma3-4B [hf:google/gemma-3-*-pt] — 5:1 local:global attention,
+128k context, 262k vocab, tied embeddings.
+
+Layout: 34 layers = 5 scanned units of (5 local + 1 global) + 4 local tail.
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+_LOCAL = LayerSpec(kind="attn", attn="local", ffn="dense")
+_GLOBAL = LayerSpec(kind="attn", attn="global", ffn="dense")
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="gemma3-4b", family="dense",
+        d_model=2560, num_heads=8, num_kv_heads=4, head_dim=256,
+        d_ff=10240, vocab=262144,
+        unit=(_LOCAL,) * 5 + (_GLOBAL,), unit_repeat=5,
+        tail=(_LOCAL,) * 4,
+        act="gelu", local_window=1024, rope_theta=1e6,
+        tie_embeddings=True,
+    )

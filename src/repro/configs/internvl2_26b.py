@@ -1,0 +1,14 @@
+"""InternVL2-26B [arXiv:2404.16821] — InternViT frontend (STUB: precomputed
+patch embeddings via input_specs) + InternLM2-20B backbone (48L, GQA kv=8).
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-26b", family="vlm",
+        d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=16384, vocab=92553,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), unit_repeat=48,
+        act="silu", num_patches=256,
+    )

@@ -1,0 +1,28 @@
+"""Jamba-1.5-Large (398B) [arXiv:2403.19887] — Mamba:attention 7:1
+interleave, MoE 16 experts top-2 on alternating layers.
+
+Layout: 72 layers = 9 scanned units of 8 (attention at unit position 4,
+MoE FFN at even positions). Mamba state is O(1) per step => long_500k.
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def _unit():
+    layers = []
+    for i in range(8):
+        kind = "attn" if i == 4 else "mamba"
+        ffn = "moe" if i % 2 == 0 else "dense"
+        layers.append(LayerSpec(kind=kind, ffn=ffn))
+    return tuple(layers)
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-1.5-large-398b", family="hybrid",
+        d_model=8192, num_heads=64, num_kv_heads=8, head_dim=128,
+        d_ff=24576, vocab=65536,
+        unit=_unit(), unit_repeat=9,
+        act="silu", subquadratic=True,
+        moe_experts=16, moe_top_k=2, moe_shared=0, moe_d_ff=24576,
+        ssm_state=16, ssm_conv=4, ssm_expand=2,
+    )

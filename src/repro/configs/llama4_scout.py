@@ -1,0 +1,15 @@
+"""Llama4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E] — MoE 16
+routed experts top-1 + 1 shared, every layer MoE. Early fusion frontend is
+out of the LM-backbone assignment scope (text tokens only)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-17b-a16e", family="moe",
+        d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=202048,
+        unit=(LayerSpec(kind="attn", ffn="moe"),), unit_repeat=48,
+        act="silu", rope_theta=5e5,
+        moe_experts=16, moe_top_k=1, moe_shared=1, moe_d_ff=8192,
+    )

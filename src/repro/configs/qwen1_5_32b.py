@@ -1,0 +1,12 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-*] — dense MHA (kv=40), QKV bias."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b", family="dense",
+        d_model=5120, num_heads=40, num_kv_heads=40, head_dim=128,
+        d_ff=27392, vocab=152064,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), unit_repeat=64,
+        qkv_bias=True, act="silu", rope_theta=1e6,
+    )

@@ -1,0 +1,12 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-*] — dense GQA(kv=8), QKV bias."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2.5-14b", family="dense",
+        d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+        d_ff=13824, vocab=152064,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), unit_repeat=48,
+        qkv_bias=True, act="silu", rope_theta=1e6,
+    )

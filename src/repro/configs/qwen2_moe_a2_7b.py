@@ -1,0 +1,14 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B] — 60 routed experts
+top-4 + 4 shared experts, every layer MoE, QKV bias."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-moe-a2.7b", family="moe",
+        d_model=2048, num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=1408, vocab=151936,
+        unit=(LayerSpec(kind="attn", ffn="moe"),), unit_repeat=24,
+        qkv_bias=True, act="silu",
+        moe_experts=60, moe_top_k=4, moe_shared=4, moe_d_ff=1408,
+    )

@@ -1,0 +1,12 @@
+"""StarCoder2-3B [arXiv:2402.19173; hf] — dense, GQA(kv=2), RoPE."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2-3b", family="dense",
+        d_model=3072, num_heads=24, num_kv_heads=2, head_dim=128,
+        d_ff=12288, vocab=49152,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), unit_repeat=30,
+        act="gelu", ffn_gated=False, rope_theta=1e5,
+    )

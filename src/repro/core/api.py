@@ -1,0 +1,60 @@
+"""User-facing algorithm API (paper Sec. 4.6).
+
+The paper exposes ``foreachVertex`` / ``asyncRun`` / ``syncRun`` with
+user-defined ``apply`` and ``propagation`` callbacks executed under
+sequential consistency (Sec. 4.4): correctness requires only that state
+updates are commutative atomic read-modify-writes. In the vectorized JAX
+engine those updates are expressed as a *combiner* (``min`` or ``add``
+scatter-reduce), which is exactly the class of CAS/fetch-sub loops used by
+every algorithm in the paper — see DESIGN.md for the equivalence argument.
+
+An :class:`Algorithm` bundles:
+
+  * ``state``        initial vertex-state pytree (dict of [V'] arrays),
+  * ``key``          which state array receives the scatter-combine,
+  * ``combine``      'min' or 'add',
+  * ``apply``        per-source message (Alg. 1 line 7),
+  * ``edge_value``   per-edge candidate from the message (propagation),
+  * ``on_process``   state mutation for processed sources (e.g. PPR's
+                     residual consumption) applied before the scatter,
+  * ``activated``    activation predicate from (old, new) key values —
+                     the batched equivalent of ``propagation`` returning a
+                     positive priority (Alg. 1 lines 13-15),
+  * ``priority``     per-vertex scheduling priority (higher = sooner).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+StateT = dict  # str -> jnp.ndarray of shape [V'] (+ scalars)
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    name: str
+    #: state array receiving the scatter-combine
+    key: str
+    #: 'min' or 'add'
+    combine: str
+    #: (state, vids[int32 L,Vm], mask[bool L,Vm]) -> msgs [L,Vm] (key dtype)
+    apply: Callable[[StateT, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    #: (msg_per_edge) -> candidate value per edge
+    edge_value: Callable[[jnp.ndarray], jnp.ndarray]
+    #: (old_key[V'], new_key[V'], deg[V']) -> activated bool[V']
+    activated: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    #: (state, deg[V']) -> int32 priority [V'] (higher scheduled first)
+    priority: Callable[[StateT, jnp.ndarray], jnp.ndarray]
+    #: optional consumption step for processed sources
+    on_process: Callable[[StateT, jnp.ndarray, jnp.ndarray], StateT] | None = None
+
+    def neutral(self, dtype) -> jnp.ndarray:
+        if self.combine == "min":
+            return jnp.array(jnp.iinfo(dtype).max if
+                             jnp.issubdtype(dtype, jnp.integer)
+                             else jnp.inf, dtype=dtype)
+        if self.combine == "add":
+            return jnp.array(0, dtype=dtype)
+        raise ValueError(f"unknown combiner {self.combine}")

@@ -1,0 +1,69 @@
+"""Block state machine (paper Fig. 4).
+
+Five externally-visible states; the engine additionally tracks a LOADING
+state (I/O issued, completion pending) to model the asynchronous io_uring
+pipeline explicitly. PROCESSING/REACTIVATED are transient within one
+scheduler tick in the vectorized engine, but the full machine is defined
+and property-tested here.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class BlockState(enum.IntEnum):
+    INACTIVE = 0      # no active vertices, not resident
+    UNCACHED = 1      # has active vertices, data on disk
+    LOADING = 2       # async I/O in flight (buffer slot reserved)
+    CACHED = 3        # data resident, awaiting execution
+    PROCESSING = 4    # being executed by an executor
+    REACTIVATED = 5   # new activations arrived during processing
+
+
+class Event(enum.IntEnum):
+    ACTIVATE = 0      # a vertex in the block becomes active
+    ISSUE_IO = 1      # preload picked the block, submitted async read
+    IO_COMPLETE = 2   # async read finished
+    PULL = 3          # executor pulled the block from the cached queue
+    FINISH = 4        # executor finished processing the block
+    EVICT = 5         # early-stop forced eviction (Sec. 4.5)
+
+
+# (state, event) -> new state. Missing pairs are invalid transitions.
+TRANSITIONS: dict[tuple[BlockState, Event], BlockState] = {
+    (BlockState.INACTIVE, Event.ACTIVATE): BlockState.UNCACHED,
+    (BlockState.UNCACHED, Event.ACTIVATE): BlockState.UNCACHED,
+    (BlockState.UNCACHED, Event.ISSUE_IO): BlockState.LOADING,
+    (BlockState.LOADING, Event.ACTIVATE): BlockState.LOADING,
+    (BlockState.LOADING, Event.IO_COMPLETE): BlockState.CACHED,
+    (BlockState.CACHED, Event.ACTIVATE): BlockState.CACHED,
+    (BlockState.CACHED, Event.PULL): BlockState.PROCESSING,
+    (BlockState.CACHED, Event.EVICT): BlockState.UNCACHED,
+    (BlockState.PROCESSING, Event.ACTIVATE): BlockState.REACTIVATED,
+    (BlockState.PROCESSING, Event.FINISH): BlockState.INACTIVE,
+    (BlockState.REACTIVATED, Event.ACTIVATE): BlockState.REACTIVATED,
+    (BlockState.REACTIVATED, Event.FINISH): BlockState.CACHED,
+    (BlockState.REACTIVATED, Event.EVICT): BlockState.UNCACHED,
+}
+
+#: States in which the block's data occupies buffer-pool slots.
+RESIDENT_STATES = frozenset({
+    BlockState.LOADING, BlockState.CACHED, BlockState.PROCESSING,
+    BlockState.REACTIVATED,
+})
+
+#: States indicating the block holds active vertices.
+ACTIVE_STATES = frozenset({
+    BlockState.UNCACHED, BlockState.LOADING, BlockState.CACHED,
+    BlockState.PROCESSING, BlockState.REACTIVATED,
+})
+
+
+def transition(state: BlockState, event: Event) -> BlockState:
+    """Apply one state-machine transition; raises on invalid edges."""
+    try:
+        return TRANSITIONS[(BlockState(state), Event(event))]
+    except KeyError:
+        raise ValueError(
+            f"invalid transition: {BlockState(state).name} "
+            f"--{Event(event).name}-->") from None

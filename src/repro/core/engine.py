@@ -1,0 +1,434 @@
+"""Block-centric asynchronous execution engine (paper Sec. 4).
+
+The engine advances a deterministic *scheduler tick* inside a
+``jax.lax.while_loop``; each tick models exactly the paper's pipeline:
+
+  completions -> preload (async I/O submit, priority queue over uncached
+  blocks, buffer-pool capacity) -> pull (cached-queue dominance, FIFO) ->
+  batched executor processing (apply/propagation as scatter-combine) ->
+  submit (frontier + block-state updates, resident-block *reuse*) ->
+  finish (reactivated blocks re-enter the cached queue with NO extra I/O).
+
+All of the paper's claims that we benchmark (read/work inflation, reuse,
+stalls) come out of this loop's counters. Sequential consistency (Sec. 4.4)
+holds because every algorithm's update is a commutative combiner; any tick
+schedule is a valid sequential order. ``sync=True`` gives the special-case
+synchronous mode of Sec. 4.3 (fresh worklist per iteration).
+
+Mini vertices (deg <= delta_deg, Sec. 5.2) are grouped into pseudo-blocks
+with zero I/O cost — they are always memory-resident, which is exactly the
+hybrid storage architecture's point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Algorithm
+from repro.storage.hybrid import HybridGraph, mini_offset
+
+# persistent per-tick block states (PROCESSING/REACTIVATED are intra-tick)
+S_INACTIVE, S_UNCACHED, S_LOADING, S_CACHED = 0, 1, 2, 3
+
+NEG_INF = np.iinfo(np.int32).min // 2
+TRACE_LEN = 16384
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    lanes: int = 4              # executor batch width (worker threads)
+    prefetch: int = 8           # max async I/O submissions per tick
+    queue_depth: int = 16       # io_uring-style in-flight cap
+    pool_slots: int = 64        # buffer pool capacity in 4 KB units
+    chunk_size: int = 256       # mini-vertex pseudo-block width
+    cached_policy: str = "fifo"  # 'fifo' (paper) | 'priority' (beyond-paper)
+    sync: bool = False          # Sec. 4.3 synchronous special case
+    early_stop: int = 0         # consecutive-reuse eviction threshold (0=off)
+    io_latency: int = 1         # ticks from submit to completion
+    max_ticks: int = 200_000
+    trace: bool = False         # record per-tick pipeline occupancy
+
+
+@dataclasses.dataclass
+class Metrics:
+    io_ops: int                 # async read submissions
+    io_blocks: int              # 4 KB blocks transferred
+    edges_scanned: int
+    vertices_processed: int
+    reuse_activations: int      # activations landing on resident blocks
+    blocks_reused: int          # reactivated blocks re-run without I/O
+    exec_idle_ticks: int        # ticks with work pending but no cached block
+    io_active_ticks: int        # ticks with reads in flight
+    barriers: int               # sync-mode iterations
+    ticks: int
+
+    @property
+    def io_bytes(self) -> int:
+        return self.io_blocks * 4096
+
+    def bytes_per_edge(self) -> float:
+        """Read-inflation metric (paper Fig. 10): loaded bytes / edge."""
+        return self.io_bytes / max(self.edges_scanned, 1)
+
+    def __add__(self, other: "Metrics") -> "Metrics":
+        return Metrics(**{f.name: getattr(self, f.name)
+                          + getattr(other, f.name)
+                          for f in dataclasses.fields(self)})
+
+
+class Engine:
+    """Executable model of ACGraph over a :class:`HybridGraph`."""
+
+    def __init__(self, hg: HybridGraph, cfg: EngineConfig = EngineConfig()):
+        self.hg = hg
+        self.cfg = cfg
+        self._build_tables()
+        self._compiled: dict[Any, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _build_tables(self) -> None:
+        hg, cfg = self.hg, self.cfg
+        nE, nM = hg.num_entities, hg.num_mini
+        NB = hg.num_blocks
+        BE = hg.block_edges
+        chunk = max(cfg.chunk_size, 1)
+        NC = -(-nM // chunk) if nM else 0
+        V = nE + nM
+        B = NB + max(NC, 1 if nM else 0)
+        B = max(B, 1)
+
+        off = hg.offsets_untagged()
+        virt = np.zeros(V, dtype=bool)
+        virt[:nE] = (hg.offsets_tagged[:nE] >> np.uint64(63)).astype(bool)
+
+        # per-vertex degree / edge start / owning scheduling block
+        deg = np.zeros(V, dtype=np.int64)
+        deg[:nE] = off[1:nE + 1] - off[:nE]
+        deg[:nE][virt[:nE]] = 0
+        ids_mini = np.arange(nE, V, dtype=np.int64)
+        if nM:
+            deg[nE:] = hg.degree_of(ids_mini)
+        v_start = np.zeros(V, dtype=np.int64)
+        v_start[:nE] = off[:nE]
+        if nM:
+            v_start[nE:] = NB * BE + mini_offset(ids_mini, hg.theta_id)
+        v_sched = np.zeros(V, dtype=np.int64)
+        v_sched[:nE] = off[:nE] // BE
+        if nM:
+            v_sched[nE:] = NB + (ids_mini - nE) // chunk
+
+        # scheduling-block tables: real blocks then mini pseudo-blocks
+        sched_first = np.concatenate([
+            hg.block_first_ent[:NB],
+            nE + np.arange(max(NC, B - NB), dtype=np.int64) * chunk,
+            np.array([V], dtype=np.int64)])
+        sched_first = np.minimum(sched_first, V)[:B + 1]
+        sched_first[-1] = V
+        sched_io = np.zeros(B, dtype=np.int64)
+        sched_io[:NB] = np.where(hg.is_tail, 0, hg.block_span)
+
+        # executor tile sizes from the data
+        counts = np.diff(sched_first)
+        Vm = int(max(counts.max(initial=1), 1))
+        tot_e = np.bincount(v_sched, weights=deg.astype(np.float64),
+                            minlength=B)
+        We = int(max(tot_e.max(initial=1.0), 1.0))
+        max_span = int(hg.block_span.max(initial=1))
+
+        self.V, self.B, self.NB = V, B, NB
+        self.Vm, self.We = Vm, We
+        self.E = int(min(cfg.lanes, B))
+        self.P = int(min(cfg.prefetch, B))
+        self.pool_slots = int(max(cfg.pool_slots, max_span))
+        assert V < 2 ** 31 and NB * BE + len(hg.mini_data) < 2 ** 31
+
+        as_i32 = lambda x: jnp.asarray(x, dtype=jnp.int32)
+        self.t_all_edges = jnp.concatenate([
+            jnp.asarray(hg.edge_data, dtype=jnp.int32),
+            jnp.asarray(hg.mini_data, dtype=jnp.int32)])
+        self.t_v_start = as_i32(v_start)
+        self.t_v_deg = as_i32(deg)
+        self.t_v_sched = as_i32(v_sched)
+        self.t_is_real = jnp.asarray(~virt)
+        self.t_sched_first = as_i32(sched_first)
+        self.t_sched_io = as_i32(sched_io)
+
+    # ------------------------------------------------------------------
+    def run(self, algo: Algorithm, init_frontier: np.ndarray,
+            init_state: dict) -> tuple[dict, Metrics, dict | None]:
+        """Execute ``algo`` to convergence; returns (state, metrics, trace)."""
+        cfg = self.cfg
+        front0 = jnp.asarray(np.asarray(init_frontier, dtype=bool)
+                             & np.asarray(self.t_is_real))
+        state0 = {k: jnp.asarray(v) for k, v in init_state.items()}
+        key = (algo.name, cfg)
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(
+                functools.partial(self._run_impl, algo))
+        out_state, counters, trace = self._compiled[key](front0, state0)
+        counters = {k: int(v) for k, v in counters.items()}
+        metrics = Metrics(**counters)
+        out_state = {k: np.asarray(v) for k, v in out_state.items()}
+        if cfg.trace:
+            trace = {k: np.asarray(v)[:min(metrics.ticks, TRACE_LEN)]
+                     for k, v in trace.items()}
+            return out_state, metrics, trace
+        return out_state, metrics, None
+
+    # ------------------------------------------------------------------
+    def _aggregates(self, algo, state, front):
+        """Per-block active counts and priorities (worklist metadata)."""
+        v_prio = algo.priority(state, self.t_v_deg).astype(jnp.int32)
+        nact = jax.ops.segment_sum(front.astype(jnp.int32), self.t_v_sched,
+                                   num_segments=self.B)
+        prio = jax.ops.segment_max(jnp.where(front, v_prio, NEG_INF),
+                                   self.t_v_sched, num_segments=self.B)
+        return nact, prio
+
+    def _run_impl(self, algo: Algorithm, front0, state0):
+        cfg = self.cfg
+        V, B, E, P = self.V, self.B, self.E, self.P
+        Vm, We = self.Vm, self.We
+        i32 = jnp.int32
+
+        nact0, prio0 = self._aggregates(algo, state0, front0)
+        b_state0 = jnp.where(nact0 > 0,
+                             jnp.where(self.t_sched_io > 0, S_UNCACHED,
+                                       S_CACHED),
+                             S_INACTIVE).astype(i32)
+        counters0 = {k: jnp.zeros((), i32) for k in (
+            "io_ops", "io_blocks", "edges_scanned", "vertices_processed",
+            "reuse_activations", "blocks_reused", "exec_idle_ticks",
+            "io_active_ticks", "barriers", "ticks")}
+        trace0 = {k: jnp.zeros(TRACE_LEN, i32)
+                  for k in ("io_blocks", "lanes", "edges", "frontier")} \
+            if cfg.trace else {}
+
+        carry0 = dict(
+            state=state0, front=front0,
+            front_next=jnp.zeros_like(front0),
+            b_state=b_state0,
+            b_issue=jnp.zeros(B, i32), b_stamp=jnp.zeros(B, i32),
+            b_reuse=jnp.zeros(B, i32),
+            b_nactive=nact0, b_prio=prio0,
+            used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
+            counters=counters0, trace=trace0)
+
+        def work_pending(c):
+            return (jnp.any(c["front"]) | jnp.any(c["front_next"])
+                    | jnp.any(c["b_state"] == S_LOADING))
+
+        def cond(c):
+            return (c["t"] < cfg.max_ticks) & work_pending(c)
+
+        def tick(c):
+            state, front = c["state"], c["front"]
+            b_state, b_prio = c["b_state"], c["b_prio"]
+            b_nactive = c["b_nactive"]
+            t = c["t"]
+            cnt = dict(c["counters"])
+
+            # ---- 1. async I/O completions -----------------------------
+            done = (b_state == S_LOADING) & (t - c["b_issue"]
+                                             >= cfg.io_latency)
+            b_state = jnp.where(done, S_CACHED, b_state)
+            b_stamp = jnp.where(done, t, c["b_stamp"])
+
+            # ---- 2. preload: priority queue over uncached blocks -------
+            inflight = jnp.sum(b_state == S_LOADING)
+            want = (b_state == S_UNCACHED) & (b_nactive > 0)
+            pkey = jnp.where(want, b_prio, NEG_INF)
+            _, pidx = jax.lax.top_k(pkey, P)
+            pvalid = pkey[pidx] > NEG_INF
+            budget = jnp.clip(cfg.queue_depth - inflight, 0, P)
+            within = jnp.arange(P, dtype=i32) < budget
+            spans = self.t_sched_io[pidx]
+            free = self.pool_slots - c["used_slots"]
+            cum_sp = jnp.cumsum(spans * (pvalid & within))
+            take = pvalid & within & (cum_sp <= free)
+            b_state = b_state.at[pidx].set(
+                jnp.where(take, S_LOADING, b_state[pidx]))
+            b_issue = c["b_issue"].at[pidx].set(
+                jnp.where(take, t, c["b_issue"][pidx]))
+            used_slots = c["used_slots"] + jnp.sum(spans * take)
+            cnt["io_ops"] += jnp.sum(take).astype(i32)
+            io_now = jnp.sum(spans * take).astype(i32)
+            cnt["io_blocks"] += io_now
+
+            # ---- 3. pull: cached-queue dominance (FIFO by default) -----
+            ready = (b_state == S_CACHED) & (b_nactive > 0)
+            if cfg.cached_policy == "fifo":
+                ekey = jnp.where(ready, -b_stamp, NEG_INF)
+            else:
+                ekey = jnp.where(ready, b_prio, NEG_INF)
+            _, eidx = jax.lax.top_k(ekey, E)
+            lane_valid = ekey[eidx] > NEG_INF
+
+            # ---- 4. process: batched apply / propagation ---------------
+            first = self.t_sched_first[eidx]
+            end = self.t_sched_first[eidx + 1]
+            vids = first[:, None] + jnp.arange(Vm, dtype=i32)[None, :]
+            inrange = vids < end[:, None]
+            vids_c = jnp.minimum(vids, V - 1)
+            vmask = (inrange & lane_valid[:, None] & front[vids_c]
+                     & self.t_is_real[vids_c])
+            degs = jnp.where(vmask, self.t_v_deg[vids_c], 0)
+            msgs = algo.apply(state, vids_c, vmask, degs)
+
+            processed = jnp.zeros(V, bool).at[vids_c.ravel()].max(
+                vmask.ravel())
+            if algo.on_process is not None:
+                state = algo.on_process(state, processed)
+            old_key = state[algo.key]
+
+            cum_e = jnp.cumsum(degs, axis=1)
+            tot = cum_e[:, -1]
+            slots = jnp.arange(We, dtype=i32)
+            owner = jax.vmap(
+                lambda ce: jnp.searchsorted(ce, slots, side="right"))(cum_e)
+            owner_c = jnp.minimum(owner, Vm - 1).astype(i32)
+            prev = cum_e - degs
+            within_e = slots[None, :] - jnp.take_along_axis(prev, owner_c,
+                                                            axis=1)
+            svalid = slots[None, :] < tot[:, None]
+            starts_lane = self.t_v_start[vids_c]
+            gidx = jnp.take_along_axis(starts_lane, owner_c, axis=1) + within_e
+            gidx = jnp.where(svalid, gidx, 0)
+            dst = self.t_all_edges[gidx]
+            msg_e = jnp.take_along_axis(msgs, owner_c, axis=1)
+            val = algo.edge_value(msg_e)
+
+            dstf = jnp.where(svalid, dst, V)
+            ext = jnp.concatenate([old_key,
+                                   algo.neutral(old_key.dtype)[None]])
+            if algo.combine == "min":
+                ext = ext.at[dstf.ravel()].min(val.ravel())
+            else:
+                ext = ext.at[dstf.ravel()].add(
+                    jnp.where(svalid, val, 0).ravel())
+            new_key = ext[:V]
+            activated = algo.activated(old_key, new_key, self.t_v_deg) \
+                & self.t_is_real
+            state = dict(state)
+            state[algo.key] = new_key
+
+            # ---- 5. submit: frontier update + reuse accounting ---------
+            front1 = front & ~processed
+            if cfg.sync:
+                front2 = front1
+                front_next = c["front_next"] | activated
+            else:
+                front2 = front1 | activated
+                front_next = c["front_next"]
+            resident_v = (b_state[self.t_v_sched] == S_CACHED) | \
+                         (b_state[self.t_v_sched] == S_LOADING)
+            cnt["reuse_activations"] += jnp.sum(
+                activated & resident_v).astype(i32)
+
+            # ---- 6. worklist metadata refresh ---------------------------
+            b_nactive2, b_prio2 = self._aggregates(algo, state, front2)
+
+            # ---- 7. finish: reactivated blocks re-enter cached queue ----
+            pulled = jnp.zeros(B, bool).at[eidx].max(lane_valid)
+            reactivated = pulled & (b_nactive2 > 0)
+            b_reuse = jnp.where(reactivated, c["b_reuse"] + 1,
+                                jnp.where(pulled, 0, c["b_reuse"]))
+            if cfg.early_stop > 0:
+                evict = reactivated & (b_reuse > cfg.early_stop)
+            else:
+                evict = jnp.zeros(B, bool)
+            finished = pulled & (b_nactive2 == 0)
+            resident_b = (b_state == S_CACHED)
+            released = (finished | evict) & resident_b
+            b_state = jnp.where(finished, S_INACTIVE, b_state)
+            b_state = jnp.where(evict, S_UNCACHED, b_state)
+            b_stamp = jnp.where(reactivated & ~evict, t, b_stamp)
+            b_reuse = jnp.where(evict, 0, b_reuse)
+            used_slots = used_slots - jnp.sum(self.t_sched_io * released)
+            cnt["blocks_reused"] += jnp.sum(reactivated & ~evict).astype(i32)
+
+            # ---- 8. activation transitions for inactive blocks ----------
+            newly = (b_state == S_INACTIVE) & (b_nactive2 > 0)
+            b_state = jnp.where(newly & (self.t_sched_io > 0), S_UNCACHED,
+                                b_state)
+            goes_cached = newly & (self.t_sched_io == 0)
+            b_state = jnp.where(goes_cached, S_CACHED, b_state)
+            b_stamp = jnp.where(goes_cached, t, b_stamp)
+
+            # ---- 9. sync barrier (Sec. 4.3) ------------------------------
+            if cfg.sync:
+                inflight_now = jnp.any(b_state == S_LOADING)
+                barrier = (~jnp.any(front2)) & (~inflight_now) \
+                    & jnp.any(front_next)
+                front2 = jnp.where(barrier, front_next, front2)
+                front_next = jnp.where(barrier, False, front_next)
+                nact_b, prio_b = self._aggregates(algo, state, front2)
+                b_nactive2 = jnp.where(barrier, nact_b, b_nactive2)
+                b_prio2 = jnp.where(barrier, prio_b, b_prio2)
+                # pool policy at barrier: resident blocks with work stay,
+                # the rest are released
+                drop = barrier & (b_state == S_CACHED) & (b_nactive2 == 0)
+                used_slots = used_slots - jnp.sum(self.t_sched_io * drop)
+                b_state = jnp.where(drop, S_INACTIVE, b_state)
+                wake = barrier & (b_state == S_INACTIVE) & (b_nactive2 > 0)
+                b_state = jnp.where(wake & (self.t_sched_io > 0), S_UNCACHED,
+                                    b_state)
+                b_state = jnp.where(wake & (self.t_sched_io == 0), S_CACHED,
+                                    b_state)
+                cnt["barriers"] += barrier.astype(i32)
+
+            # ---- 10. counters & trace -----------------------------------
+            lanes_used = jnp.sum(lane_valid).astype(i32)
+            edges_now = jnp.sum(tot).astype(i32)
+            cnt["edges_scanned"] += edges_now
+            cnt["vertices_processed"] += jnp.sum(vmask).astype(i32)
+            cnt["exec_idle_ticks"] += ((lanes_used == 0)
+                                       & jnp.any(front2)).astype(i32)
+            cnt["io_active_ticks"] += (inflight + jnp.sum(take)
+                                       > 0).astype(i32)
+            cnt["ticks"] += 1
+            trace = c["trace"]
+            if cfg.trace:
+                ti = jnp.minimum(t, TRACE_LEN - 1)
+                trace = {
+                    "io_blocks": trace["io_blocks"].at[ti].set(io_now),
+                    "lanes": trace["lanes"].at[ti].set(lanes_used),
+                    "edges": trace["edges"].at[ti].set(edges_now),
+                    "frontier": trace["frontier"].at[ti].set(
+                        jnp.sum(front2).astype(i32)),
+                }
+
+            return dict(state=state, front=front2, front_next=front_next,
+                        b_state=b_state, b_issue=b_issue, b_stamp=b_stamp,
+                        b_reuse=b_reuse, b_nactive=b_nactive2,
+                        b_prio=b_prio2, used_slots=used_slots, t=t + 1,
+                        counters=cnt, trace=trace)
+
+        out = jax.lax.while_loop(cond, tick, carry0)
+        return out["state"], out["counters"], out["trace"]
+
+
+# ----------------------------------------------------------------------
+# Paper-API veneer (Sec. 4.6)
+# ----------------------------------------------------------------------
+
+def foreach_vertex_frontier(priority: np.ndarray) -> np.ndarray:
+    """``foreachVertex`` semantics: vertices with priority > 0 activate."""
+    return np.asarray(priority) > 0
+
+
+def asyncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
+    """Process the worklist until convergence (paper Eqn. 2)."""
+    assert not engine.cfg.sync
+    return engine.run(algo, init_frontier, init_state)
+
+
+def syncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
+    """Synchronous special case: fresh worklist per iteration (Sec. 4.3)."""
+    assert engine.cfg.sync
+    return engine.run(algo, init_frontier, init_state)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, SyntheticShards
+
+__all__ = ["TokenPipeline", "SyntheticShards"]

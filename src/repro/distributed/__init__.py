@@ -1,0 +1,12 @@
+from repro.distributed.fault_tolerance import (HeartbeatRegistry,
+                                               StragglerDetector,
+                                               SimulatedFailure,
+                                               run_with_restart)
+from repro.distributed.compression import (CompressionState,
+                                           compress_gradients,
+                                           decompress_gradients)
+from repro.distributed.overlap import accumulate_grads
+
+__all__ = ["HeartbeatRegistry", "StragglerDetector", "SimulatedFailure",
+           "run_with_restart", "CompressionState", "compress_gradients",
+           "decompress_gradients", "accumulate_grads"]

@@ -1,0 +1,82 @@
+"""Gradient compression with error feedback (int8, per-tensor-chunk scale).
+
+Used on the slow pod axis: before the cross-pod all-reduce, gradients are
+quantized to int8 with a per-chunk max-abs scale; the quantization residual
+is fed back into the next step (error feedback keeps the method unbiased
+in the long run — Karimireddy et al.). Cross-pod traffic drops ~4x for
+bf16 / ~8x for f32 gradients, which the roofline's collective term
+rewards directly.
+
+``compress -> (psum over pod axis) -> decompress`` composes with either
+pjit (psum inserted by GSPMD on the replicated-gradient reduction) or an
+explicit shard_map collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+CHUNK = 4096
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: Any          # pytree like grads (f32 residuals)
+
+    @staticmethod
+    def init(grads) -> "CompressionState":
+        return CompressionState(error=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _quant_one(g, err):
+    g32 = g.astype(jnp.float32) + err
+    flat = g32.reshape(-1)
+    pad = (-flat.shape[0]) % CHUNK
+    flatp = jnp.pad(flat, (0, pad))
+    chunks = flatp.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:flat.shape[0]] \
+        .reshape(g.shape)
+    new_err = g32 - deq
+    return q, scale[:, 0], new_err
+
+
+def compress_gradients(grads, state: CompressionState):
+    """Returns (payload pytree of (int8 q, f32 scales), new state)."""
+    qs, scales, errs = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(state.error)
+    for g, e in zip(leaves, err_leaves):
+        q, s, ne = _quant_one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    payload = (jax.tree.unflatten(treedef, qs),
+               jax.tree.unflatten(treedef, scales))
+    return payload, CompressionState(jax.tree.unflatten(treedef, errs))
+
+
+def decompress_gradients(payload, example):
+    qs, scales = payload
+    q_leaves = jax.tree.leaves(qs)
+    s_leaves = jax.tree.leaves(scales)
+    ex_leaves, treedef = jax.tree.flatten(example)
+    out = []
+    for q, s, ex in zip(q_leaves, s_leaves, ex_leaves):
+        deq = (q.astype(jnp.float32) * s[:, None]).reshape(-1)
+        deq = deq[:ex.size].reshape(ex.shape)
+        out.append(deq.astype(jnp.float32))
+    return jax.tree.unflatten(treedef, out)
+
+
+def compressed_bytes(payload) -> int:
+    qs, scales = payload
+    return sum(x.size for x in jax.tree.leaves(qs)) + \
+        4 * sum(x.size for x in jax.tree.leaves(scales))

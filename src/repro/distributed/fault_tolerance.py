@@ -1,0 +1,101 @@
+"""Fault tolerance for 1000+-node operation.
+
+Three cooperating pieces (exercised end-to-end in the tests and
+``launch/train.py``):
+
+* :class:`HeartbeatRegistry` — host liveness bookkeeping; a coordinator
+  marks hosts dead after ``timeout`` without a heartbeat.
+* :class:`StragglerDetector` — per-step wall-time outlier detection
+  (k x running median); the trainer reacts by excluding the straggler from
+  the next elastic remesh (mitigation policy) or simply logging.
+* :func:`run_with_restart` — the restart loop: run the training closure;
+  on (simulated) node failure, shrink the world, restore the latest
+  checkpoint onto the new mesh (elastic resharding is free because
+  checkpoints are host arrays — see checkpoint/manager.py) and continue.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests/drivers to model a node loss."""
+
+    def __init__(self, host: str = "host0"):
+        super().__init__(f"simulated failure of {host}")
+        self.host = host
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 30.0):
+        self.timeout_s = timeout_s
+        self.last_seen: dict[str, float] = {}
+
+    def beat(self, host: str, now: float | None = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: float | None = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def alive(self, now: float | None = None) -> list[str]:
+        dead = set(self.dead_hosts(now))
+        return [h for h in self.last_seen if h not in dead]
+
+
+class StragglerDetector:
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.durations: dict[str, collections.deque] = {}
+        self.window = window
+
+    def record(self, host: str, duration_s: float) -> None:
+        self.durations.setdefault(
+            host, collections.deque(maxlen=self.window)).append(duration_s)
+
+    def stragglers(self) -> list[str]:
+        per_host = {h: statistics.median(d)
+                    for h, d in self.durations.items() if d}
+        if len(per_host) < 2:
+            return []
+        med = statistics.median(per_host.values())
+        return [h for h, m in per_host.items() if m > self.factor * med]
+
+
+@dataclasses.dataclass
+class RestartReport:
+    restarts: int
+    final_step: int
+    worlds: list[int]
+
+
+def run_with_restart(make_world: Callable[[int], Any],
+                     train: Callable[[Any, int], int],
+                     *, initial_world: int, min_world: int = 1,
+                     max_restarts: int = 8) -> RestartReport:
+    """Run ``train(world, start_step)`` with elastic restart-on-failure.
+
+    ``make_world(n)`` builds the (mesh/trainer) context for an n-host
+    world; on failure the world shrinks by one (elastic scaling) and the
+    training closure resumes from its checkpointed step.
+    """
+    world = initial_world
+    restarts = 0
+    step = 0
+    worlds = [world]
+    while True:
+        ctx = make_world(world)
+        try:
+            step = train(ctx, step)
+            return RestartReport(restarts, step, worlds)
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            world = max(min_world, world - 1)
+            worlds.append(world)

@@ -1,0 +1,4 @@
+from repro.io_sim.ssd_model import SSDModel
+from repro.io_sim.aio import AsyncLoader
+
+__all__ = ["SSDModel", "AsyncLoader"]

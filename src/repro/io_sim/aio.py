@@ -1,0 +1,64 @@
+"""Asynchronous loader with io_uring-style submission/completion queues.
+
+This is the *host-side* (real-threads) counterpart of the engine's modeled
+prefetch pipeline, used by the training data pipeline
+(``repro/data/pipeline.py``) to overlap host I/O with device compute —
+the paper's Preload loop (Sec. 4.5) applied at the input-pipeline tier.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import threading
+from typing import Any, Callable
+
+
+class AsyncLoader:
+    """Bounded async submission/completion queue (submit -> reap)."""
+
+    def __init__(self, load_fn: Callable[[Any], Any], queue_depth: int = 8,
+                 workers: int = 2):
+        self._load_fn = load_fn
+        self._qd = queue_depth
+        self._pool = concurrent.futures.ThreadPoolExecutor(workers)
+        self._inflight: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+
+    def submit(self, key: Any) -> bool:
+        """Submit a read; returns False if the queue is full (non-blocking)."""
+        with self._lock:
+            if len(self._inflight) >= self._qd:
+                return False
+            fut = self._pool.submit(self._load_fn, key)
+            self._inflight.append((key, fut))
+            self.submitted += 1
+            return True
+
+    def reap(self, block: bool = False) -> list[tuple[Any, Any]]:
+        """Collect finished reads (non-blocking unless ``block``)."""
+        done: list[tuple[Any, Any]] = []
+        with self._lock:
+            pending = collections.deque()
+            while self._inflight:
+                key, fut = self._inflight.popleft()
+                if fut.done() or (block and not done and not pending):
+                    done.append((key, fut.result()))
+                    self.completed += 1
+                else:
+                    pending.append((key, fut))
+            self._inflight = pending
+        return done
+
+    def drain(self) -> list[tuple[Any, Any]]:
+        out = []
+        while True:
+            with self._lock:
+                empty = not self._inflight
+            if empty:
+                return out
+            out.extend(self.reap(block=True))
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)

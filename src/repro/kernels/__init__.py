@@ -1,0 +1,5 @@
+from repro.kernels.ops import (flash_attention_tpu, frontier_relax,
+                               paged_decode_attention)
+
+__all__ = ["frontier_relax", "flash_attention_tpu",
+           "paged_decode_attention"]

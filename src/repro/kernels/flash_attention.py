@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: flash attention (online softmax over KV tiles).
+
+Grid (BH, nq, nk), kv innermost; (m, l) running statistics and the output
+accumulator live in VMEM scratch across the kv dimension. Causal masking
+skips fully-masked tiles via pl.when (on TPU this saves the MXU work the
+jnp twin cannot skip — see the causal-chunk note in models/attention.py).
+
+BlockSpecs: q [1, cq, hd], k/v [1, ck, hd], out [1, cq, hd]; hd padded to
+a lane multiple of 128 by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, cq: int, ck: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qi * cq
+    k0 = ki * ck
+    # tile is live unless fully above the diagonal / outside the window
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k0 <= q0 + cq - 1)
+    if window > 0:
+        live = jnp.logical_and(live, q0 - (k0 + ck - 1) < window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # [cq, hd]
+        k = k_ref[0].astype(jnp.float32)            # [ck, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        mask = jnp.ones((cq, ck), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           cq: int = 128, ck: int = 128, scale: float,
+                           interpret: bool = True):
+    """q: [BH, Sq, hd]; k/v: [BH, Sk, hd] (heads pre-broadcast/folded)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    cq = min(cq, Sq)
+    ck = min(ck, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0
+    nq, nk = Sq // cq, Sk // ck
+    grid = (BH, nq, nk)
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               cq=cq, ck=ck, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, cq, hd), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, ck, hd), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, ck, hd), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, cq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        # (m, l) running stats + fp32 accumulator, persistent across nk
+        scratch_shapes=[pltpu.VMEM((cq,), jnp.float32),
+                        pltpu.VMEM((cq,), jnp.float32),
+                        pltpu.VMEM((cq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q * scale, k, v)

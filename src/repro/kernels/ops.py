@@ -1,0 +1,84 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+kernel body runs in Python via the Pallas interpreter); on TPU the same
+``pl.pallas_call`` lowers to Mosaic. The wrappers handle padding to
+hardware-aligned tiles and GQA head folding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.frontier_relax import frontier_relax_pallas
+from repro.kernels.paged_attention import paged_decode_attention_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, multiple: int, value=0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x, x.shape[axis]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), x.shape[axis]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def frontier_relax(starts, degs, active, msgs, edges, *,
+                   op: str = "identity", interpret: bool = not _ON_TPU):
+    """Block frontier relax (paper Alg. 1 lines 5-8). Shapes:
+    starts/degs/active/msgs [G, Vm] ; edges [G, BE]."""
+    starts, _ = _pad_to(starts.astype(jnp.int32), 1, 8)
+    degs, _ = _pad_to(degs.astype(jnp.int32), 1, 8)
+    active, _ = _pad_to(active.astype(jnp.int32), 1, 8)
+    msgs, _ = _pad_to(msgs.astype(jnp.float32), 1, 8)
+    edges_p, BE = _pad_to(edges.astype(jnp.int32), 1, 128, value=-1)
+    vals, valid = frontier_relax_pallas(starts, degs, active, msgs,
+                                        edges_p, op=op,
+                                        interpret=interpret)
+    return vals[:, :BE], valid[:, :BE]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, window: int = 0,
+                        interpret: bool = not _ON_TPU):
+    """q: [B,S,H,hd]; k/v: [B,S,K,hd] (GQA broadcast inside)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = float(1.0 / np.sqrt(hd))
+    kx = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vx = jnp.repeat(v, G, axis=2) if G > 1 else v
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], hd)
+    qf, kf, vf = fold(q), fold(kx), fold(vx)
+    qf, _ = _pad_to(qf, 2, 128)
+    kf, _ = _pad_to(kf, 2, 128)
+    vf, _ = _pad_to(vf, 2, 128)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 scale=scale, interpret=interpret)
+    out = out[:, :, :hd]
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, lens, *,
+                           interpret: bool = not _ON_TPU):
+    """ACGraph-paged KV decode attention.
+    q: [B,H,hd]; pages: [n_phys, page, hd]; table: int32 [B, n_logical];
+    lens: int32 [B]."""
+    hd = q.shape[-1]
+    scale = float(1.0 / np.sqrt(hd))
+    q_p, _ = _pad_to(q, 2, 128)
+    k_p, _ = _pad_to(k_pages, 2, 128)
+    v_p, _ = _pad_to(v_pages, 2, 128)
+    out = paged_decode_attention_pallas(
+        q_p, k_p, v_p, block_table.astype(jnp.int32),
+        lens.astype(jnp.int32), scale=scale, interpret=interpret)
+    return out[:, :, :hd]

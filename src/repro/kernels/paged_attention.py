@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: paged decode attention — the ACGraph block manager
+applied to the KV cache (DESIGN.md Sec. 3.1).
+
+The KV cache is stored as 4 KB-aligned *pages* ([n_pages, page, hd]); a
+per-sequence block table maps logical page slots to physical pages —
+exactly the paper's block-centric indirection, with the buffer pool as the
+page allocator. The kernel uses PrefetchScalarGridSpec: the block table is
+scalar-prefetched into SMEM, and the K/V BlockSpec ``index_map`` reads it
+to stream the right physical page HBM->VMEM per grid step — the TPU
+analogue of the worklist handing a resident block to an executor.
+
+Grid (B, n_logical_pages); online-softmax scratch as in flash attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page: int, npages: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    base = pi * page
+    live = base < seq_len
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # [H, hd]
+        k = k_ref[0].astype(jnp.float32)               # [page, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < seq_len, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, lens,
+                                  *, scale: float, interpret: bool = True):
+    """q: [B, H, hd]; k_pages/v_pages: [n_phys, page, hd];
+    block_table: int32 [B, n_logical]; lens: int32 [B]."""
+    B, H, hd = q.shape
+    page = k_pages.shape[1]
+    npages = block_table.shape[1]
+    kernel = functools.partial(_paged_kernel, page=page, npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_table, lens -> SMEM
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, p, tbl, ln: (b, 0, 0)),
+            # physical page selected via the scalar-prefetched table
+            pl.BlockSpec((1, page, hd),
+                         lambda b, p, tbl, ln: (tbl[b, p], 0, 0)),
+            pl.BlockSpec((1, page, hd),
+                         lambda b, p, tbl, ln: (tbl[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, p, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((H,), jnp.float32),
+                        pltpu.VMEM((H,), jnp.float32),
+                        pltpu.VMEM((H, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lens, q * scale, k_pages, v_pages)

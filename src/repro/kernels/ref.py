@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def frontier_relax_ref(starts, degs, active, msgs, edges, *,
+                       op: str = "identity"):
+    """Same contract as kernels.frontier_relax: per-edge candidate values
+    and validity for active-vertex edges inside each block."""
+    G, Vm = starts.shape
+    BE = edges.shape[1]
+    slot = jnp.arange(BE)[None, None, :]                 # [1,1,BE]
+    s = starts[:, :, None]
+    e = (starts + jnp.where(active > 0, degs, 0))[:, :, None]
+    member = (slot >= s) & (slot < e)                    # [G,Vm,BE]
+    vals = jnp.einsum("gv,gvb->gb", msgs.astype(jnp.float32),
+                      member.astype(jnp.float32))
+    valid = member.any(axis=1)
+    if op == "plus_one":
+        vals = vals + 1.0
+    vals = jnp.where(valid, vals, jnp.inf)
+    return vals, valid
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float = 1.0):
+    """q/k/v: [BH, S, hd] (heads folded), plain softmax attention."""
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    Sq, Sk = q.shape[1], k.shape[1]
+    qpos, kpos = jnp.arange(Sq), jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lens, *,
+                               scale: float = 1.0):
+    """q: [B,H,hd]; pages: [n_phys, page, hd]; table: [B,n_logical]."""
+    B, H, hd = q.shape
+    page = k_pages.shape[1]
+    npg = block_table.shape[1]
+    # gather logical KV [B, npg*page, hd]
+    k = k_pages[block_table].reshape(B, npg * page, hd)
+    v = v_pages[block_table].reshape(B, npg * page, hd)
+    s = jnp.einsum("bhd,bkd->bhk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    kpos = jnp.arange(npg * page)[None, None, :]
+    s = jnp.where(kpos < lens[:, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (including repro.*):
+# jax locks the device count at first backend initialization. 512 host
+# placeholder devices let jax.make_mesh build the production meshes
+# (16x16 single-pod / 2x16x16 multi-pod). ONLY the dry-run sets this.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES   # noqa: E402
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (collective_bytes_from_hlo,  # noqa: E402
+                                   count_hlo_ops, roofline_terms)
+from repro.launch.specs import (analytic_memory_bytes,  # noqa: E402
+                                make_cell, model_flops)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh):
+  jit(step).lower(**abstract_inputs).compile()
+then record memory_analysis(), cost_analysis() and the collective schedule
+parsed from the compiled HLO. Success proves the distribution config is
+coherent: shardings propagate, collectives are insertable, and the
+program fits. Results cached as JSON under results/dryrun/.
+"""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, dump_hlo: bool = False,
+             variant: str = "baseline") -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                 "variant": variant}
+    if "actshard" in variant:
+        from repro.models import pspec
+        pspec.set_act_model_sharding(True)
+    if "moedisp" in variant:
+        from repro.models import pspec
+        pspec.set_moe_dispatch_sharding(True)
+    cell = make_cell(arch, shape_name, variant=variant)
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec["chips"] = chips
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.step,
+                         in_shardings=cell.in_specs(mesh),
+                         out_shardings=cell.out_specs(mesh),
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args_abstract)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- memory analysis (proves it fits) ------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        print(ma)
+        for field in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            v = getattr(ma, field, None)
+            if v is not None:
+                rec[field] = int(v)
+    except Exception as e:                                   # noqa: BLE001
+        rec["memory_analysis_error"] = str(e)
+
+    # ---- cost analysis (FLOPs / bytes, per-device module) --------------
+    ca = compiled.cost_analysis() or {}
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    rec["flops_per_device"] = flops_dev
+    rec["bytes_per_device"] = bytes_dev
+
+    # ---- collective schedule from compiled HLO -------------------------
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)       # flat (loop bodies x1)
+    rec["collectives_flat"] = coll
+    rec["hlo_op_counts"] = count_hlo_ops(hlo)
+    # loop-aware analysis: scan bodies weighted by trip count (XLA's
+    # cost_analysis counts while bodies once — see hlo_analysis.py)
+    la = analyze(hlo)
+    rec["loop_aware"] = {
+        "flops_per_device": la["flops"],
+        "bytes_per_device": la["bytes"],
+        "bytes_amplification": la.get("bytes_amplification", 1.0),
+        "collective_bytes_per_device": la["collective_bytes"],
+        "collective_by_kind": la["collective_by_kind"],
+    }
+    if dump_hlo:
+        hp = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.hlo")
+        with open(hp, "w") as f:
+            f.write(hlo)
+
+    # ---- roofline terms ------------------------------------------------
+    # flops: loop-aware HLO dot count; collectives: loop-aware HLO;
+    # memory: analytic traffic model (HLO bytes unreliable — see
+    # specs.analytic_memory_bytes docstring)
+    mem_bytes = analytic_memory_bytes(cell, chips)
+    rec["analytic_memory_bytes_per_device"] = mem_bytes
+    terms = roofline_terms(
+        flops_per_device=max(la["flops"], flops_dev),
+        bytes_per_device=mem_bytes,
+        coll_bytes_per_device=max(la["collective_bytes"],
+                                  float(coll["total"])),
+        chips=chips)
+    mf = model_flops(cell.cfg, cell.shape)
+    terms["model_flops"] = mf
+    terms["model_vs_hlo_flops"] = (mf / terms["flops_global"]
+                                   if terms["flops_global"] else 0.0)
+    rec["roofline"] = terms
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every remaining (arch x shape x mesh) cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="perf variant: baseline | tp | ep | tp+ep | "
+                         "actshard | ... (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if the JSON cache exists")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s, mp) for a in ARCH_NAMES for s in SHAPES
+                 for mp in (False, True)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    for arch, shape, mp in cells:
+        tag = "pod2x16x16" if mp else "pod16x16"
+        vtag = "" if args.variant == "baseline" else f"__{args.variant}"
+        path = os.path.join(args.out, f"{arch}__{shape}__{tag}{vtag}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cache] {path}")
+            continue
+        print(f"=== dryrun {arch} x {shape} x {tag} ===", flush=True)
+        try:
+            rec = run_cell(arch, shape, mp, args.out, args.dump_hlo,
+                           variant=args.variant)
+        except Exception:                                    # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": tag,
+                   "status": "error", "error": traceback.format_exc()}
+            print(rec["error"], flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[done] {path}: {rec.get('status')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

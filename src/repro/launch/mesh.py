@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not module-level state) so importing this module
+never touches jax device state. The single-pod mesh is 16x16 = 256 chips
+(data x model); the multi-pod mesh adds a leading pure-DP "pod" axis for
+2 pods = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int = 8):
+    """Small mesh over however many (possibly fake) devices exist —
+    used by sharding unit tests, never by the dry-run."""
+    n = min(devices, len(jax.devices()))
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

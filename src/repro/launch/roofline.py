@@ -1,0 +1,106 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+  compute    = HLO_FLOPs_global   / (chips * 197e12)
+  memory     = HLO_bytes_global   / (chips * 819e9)
+  collective = coll_bytes_global  / (chips * 50e9)
+
+``cost_analysis()`` reports the per-device partitioned module, so global =
+per-device * chips. Collective bytes are NOT in cost_analysis: we parse the
+compiled HLO text and sum the shaped-buffer sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute (async
+``-start`` forms counted once; ``-done`` skipped), then scale by chips.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# shapes like f32[16,128]{1,0} or bf16[2,4,8]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum output-buffer bytes of collective ops (per device)."""
+    out: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        # match '<shape(s)> <op-kind>(' on the RHS of an assignment
+        m = re.search(r"=\s+(.+?)\s+([\w-]+)\(", ls)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        kind = None
+        for k in _COLL_KINDS:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(shapes_str))
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+def count_hlo_ops(hlo_text: str, names=("fusion", "all-gather",
+                                        "all-reduce", "reduce-scatter",
+                                        "all-to-all", "collective-permute",
+                                        "copy", "transpose", "while")):
+    counts = {n: 0 for n in names}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+\S+\s+([\w-]+)\(", line)
+        if m:
+            op = m.group(1)
+            for n in names:
+                if op == n or op == n + "-start":
+                    counts[n] += 1
+    return counts
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, chips: int
+                   ) -> dict[str, Any]:
+    flops_global = flops_per_device * chips
+    bytes_global = bytes_per_device * chips
+    coll_global = coll_bytes_per_device * chips
+    compute_s = flops_global / (chips * PEAK_FLOPS_BF16)
+    memory_s = bytes_global / (chips * HBM_BW)
+    coll_s = coll_global / (chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s,
+             "flops_global": flops_global, "bytes_global": bytes_global,
+             "collective_bytes_global": coll_global}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = {"compute_s": "compute", "memory_s": "memory",
+                         "collective_s": "collective"}[dom]
+    total = max(compute_s + 0.0, 1e-30)
+    bound = max(compute_s, memory_s, coll_s)
+    terms["roofline_fraction"] = compute_s / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,260 @@
+"""Dry-run cell construction: (arch x shape) -> step fn + abstract args +
+sharding specs. Everything is ShapeDtypeStruct-based — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.sharding import batch_spec, cache_specs, param_specs
+from repro.models.transformer import Model
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ArchConfig
+    model: Model
+    step: Callable
+    args_abstract: tuple
+    in_specs: Callable[[Mesh], tuple]
+    out_specs: Callable[[Mesh], Any]
+    donate: tuple[int, ...]
+    skip_reason: str | None = None
+
+
+def cell_is_skipped(cfg: ArchConfig, shape: ShapeSpec) -> str | None:
+    """long_500k requires sub-quadratic context state (DESIGN.md Sec. 5)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention architecture: 512k-token decode state "
+                "is neither windowed nor recurrent; skipped per assignment")
+    return None
+
+
+def train_batch_abstract(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.jdtype
+    batch = {}
+    s_text = S - cfg.num_patches if cfg.num_patches else S
+    batch["tokens"] = sds((B, s_text), jnp.int32)
+    batch["targets"] = sds((B, s_text), jnp.int32)
+    if cfg.is_encdec:
+        batch["enc_frames"] = sds((B, cfg.enc_seq, cfg.d_model), dt)
+    if cfg.num_patches:
+        batch["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model), dt)
+    return batch
+
+
+def _batch_specs(batch_abs, mesh: Mesh):
+    return {k: NamedSharding(mesh, batch_spec(v.shape, mesh))
+            for k, v in batch_abs.items()}
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def variant_flags(variant: str, shape_kind: str) -> dict:
+    """Beyond-paper optimization toggles (EXPERIMENTS.md §Perf):
+    tp       — inference params sharded over model only (no per-step
+               weight all-gathers; replicated over data),
+    ep       — MoE expert stacks sharded over data (expert parallelism),
+    actshard — training activations' feature dim sharded over model
+               (smaller remat saves; applied via models.pspec)."""
+    micro = 1
+    for part in variant.split("+"):
+        if part.startswith("micro"):
+            micro = int(part[len("micro"):])
+    return {
+        "tp": "tp" in variant and shape_kind != "train",
+        "ep": "ep" in variant,
+        "actshard": "actshard" in variant and shape_kind == "train",
+        "micro": micro if shape_kind == "train" else 1,
+    }
+
+
+def make_cell(arch: str, shape_name: str, variant: str = "baseline"
+              ) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    skip = cell_is_skipped(cfg, shape)
+    params_abs = model.abstract_params()
+    vf = variant_flags(variant, shape.kind)
+    _pending_variant[0] = vf
+    pmode = "tp" if vf["tp"] else \
+        ("fsdp-zpod" if "zpod" in variant else "fsdp")
+    pep = vf["ep"]
+
+    def pspecs(mesh):
+        return param_specs(params_abs, mesh, mode=pmode,
+                           expert_parallel=pep)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        batch_abs = train_batch_abstract(cfg, shape)
+
+        n_micro = vf["micro"]
+
+        def train_step(params, opt, batch):
+            if n_micro > 1:
+                from repro.distributed.overlap import accumulate_grads
+                loss, grads = accumulate_grads(
+                    lambda p, b: model.loss(p, b), params, batch, n_micro)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch))(params)
+            lr = cosine_schedule(opt["step"], peak_lr=3e-4,
+                                 warmup_steps=2000, total_steps=100_000)
+            params, opt, gnorm = adamw_update(params, grads, opt, lr=lr)
+            return params, opt, {"loss": loss, "grad_norm": gnorm}
+
+        def in_specs(mesh):
+            ps = pspecs(mesh)
+            os_ = {"mu": ps, "nu": ps, "step": P()}
+            return (_named(mesh, ps), _named(mesh, os_),
+                    _batch_specs(batch_abs, mesh))
+
+        def out_specs(mesh):
+            ps = pspecs(mesh)
+            os_ = {"mu": ps, "nu": ps, "step": P()}
+            return (_named(mesh, ps), _named(mesh, os_),
+                    {"loss": NamedSharding(mesh, P()),
+                     "grad_norm": NamedSharding(mesh, P())})
+
+        return Cell(arch, shape, cfg, model, train_step,
+                    (params_abs, opt_abs, batch_abs), in_specs, out_specs,
+                    donate=(0, 1), skip_reason=skip)
+
+    if shape.kind == "prefill":
+        batch_abs = train_batch_abstract(cfg, shape)
+        batch_abs.pop("targets")
+        S_total = shape.seq_len
+        cache_abs = jax.eval_shape(lambda: model.init_cache(
+            shape.global_batch, S_total))
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=S_total)
+
+        def in_specs(mesh):
+            return (_named(mesh, pspecs(mesh)),
+                    _batch_specs(batch_abs, mesh))
+
+        def out_specs(mesh):
+            lspec = _logits_spec(cfg, shape, mesh)
+            return (NamedSharding(mesh, lspec),
+                    _named(mesh, cache_specs(cache_abs, mesh)))
+
+        return Cell(arch, shape, cfg, model, prefill_step,
+                    (params_abs, batch_abs), in_specs, out_specs,
+                    donate=(), skip_reason=skip)
+
+    # decode
+    B = shape.global_batch
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    tok_abs = sds((B, 1), jnp.int32)
+    pos_abs = sds((B,), jnp.int32)
+
+    def decode_step(params, caches, tokens, pos):
+        logits, caches = model.decode(params, tokens, pos, caches)
+        return logits, caches
+
+    def in_specs(mesh):
+        return (_named(mesh, pspecs(mesh)),
+                _named(mesh, cache_specs(cache_abs, mesh)),
+                NamedSharding(mesh, batch_spec(tok_abs.shape, mesh)),
+                NamedSharding(mesh, batch_spec(pos_abs.shape, mesh)))
+
+    def out_specs(mesh):
+        return (NamedSharding(mesh, _logits_spec(cfg, shape, mesh)),
+                _named(mesh, cache_specs(cache_abs, mesh)))
+
+    return Cell(arch, shape, cfg, model, decode_step,
+                (params_abs, cache_abs, tok_abs, pos_abs), in_specs,
+                out_specs, donate=(1,), skip_reason=skip)
+
+
+def _logits_spec(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> P:
+    bs = batch_spec((shape.global_batch, cfg.vocab), mesh)
+    b0 = bs[0] if len(bs) else None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    v = "model" if ("model" in sizes
+                    and cfg.vocab % sizes["model"] == 0) else None
+    return P(b0, v)
+
+
+_pending_variant = [{"tp": False, "ep": False, "actshard": False}]
+
+
+def analytic_memory_bytes(cell: "Cell", chips: int) -> float:
+    """First-order per-device HBM traffic model (see EXPERIMENTS.md
+    §Roofline for derivation). HLO-text byte counting is unreliable on
+    this backend (fused in-place updates alias whole buffers; CPU loop
+    carries add copies TPU elides), so the memory term uses this
+    transparent model; FLOPs and collective bytes stay HLO-derived.
+
+      train:   24 B/param (bf16 fwd+bwd reads, grad, fp32 Adam moments
+               r+w, param update) + ~6x activation bytes (fwd write/read,
+               remat recompute, bwd read)
+      prefill: params read + 2x activations + KV-cache write
+      decode:  params read + KV/state-cache read + writeback slice
+    """
+    cfg, shape = cell.cfg, cell.shape
+    m = cell.model
+    p_count = m.param_count()
+    # TP-variant inference replicates params over data: HBM reads the
+    # full model-parallel shard (1/16), not the FSDP shard (1/chips)
+    tp = _pending_variant[0].get("tp", False) and shape.kind != "train"
+    p_dev = p_count / (_mesh_model_ways(chips) if tp else chips)
+    tokens_dev = shape.global_batch * shape.seq_len / chips * \
+        _mesh_model_ways(chips)      # batch shards only over data/pod
+    act_dev = cfg.num_layers * tokens_dev * cfg.d_model * 2.0
+    cache_bytes_dev = 0.0
+    if shape.kind != "train":
+        cache_abs = cell.args_abstract[1] if shape.kind == "decode" else \
+            None
+        if cache_abs is None:
+            cache_abs = jax.eval_shape(lambda: m.init_cache(
+                shape.global_batch, shape.seq_len))
+        tot = sum(np.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+                  for leaf in jax.tree.leaves(cache_abs))
+        cache_bytes_dev = float(tot) / chips
+    if shape.kind == "train":
+        return 24.0 * p_dev + 6.0 * act_dev
+    if shape.kind == "prefill":
+        return 2.0 * p_dev + 2.0 * act_dev + cache_bytes_dev
+    # decode: read all weights + the whole cache once per token
+    return 2.0 * p_dev + cache_bytes_dev
+
+
+def _mesh_model_ways(chips: int) -> int:
+    # production meshes: 256 = 16 data x 16 model; 512 adds pod=2.
+    return 16
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N_active D (inference)."""
+    m = Model(cfg)
+    n_active = m.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq

@@ -1,0 +1,4 @@
+from repro.models.transformer import Model
+from repro.models.sharding import param_specs, batch_spec, cache_specs
+
+__all__ = ["Model", "param_specs", "batch_spec", "cache_specs"]

@@ -1,0 +1,221 @@
+"""Attention: GQA projections, RoPE, flash-style chunked attention
+(training/prefill), direct cached attention (decode), cross-attention.
+
+The chunked online-softmax implementation is the pure-JAX twin of the
+Pallas kernel in ``repro/kernels/flash_attention.py`` — `lax.map` over
+query chunks bounds live score tensors to [B, cq, H, ck], which is what
+makes 32k-sequence prefill fit the per-device memory budget.
+
+Causal-chunk note (recorded for the roofline): all KV chunks are computed
+and masked, so causal attention lowers ~2x the minimal FLOPs; the Pallas
+kernel skips fully-masked tiles on TPU. See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope
+from repro.models.pspec import shard_batch
+
+NEG = -1e30
+
+
+def _pick_chunk(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (keeps tiles regular)."""
+    if S <= target:
+        return S
+    for c in range(target, 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+def attention_init(rng, d_model: int, H: int, K: int, hd: int, bias: bool,
+                   dtype) -> dict:
+    ks = jax.random.split(rng, 4)
+    s = float(1.0 / np.sqrt(d_model))
+    p = {"wq": jax.random.normal(ks[0], (d_model, H * hd), dtype) * s,
+         "wk": jax.random.normal(ks[1], (d_model, K * hd), dtype) * s,
+         "wv": jax.random.normal(ks[2], (d_model, K * hd), dtype) * s,
+         "wo": jax.random.normal(ks[3], (H * hd, d_model), dtype)
+         * (float(1.0 / np.sqrt(H * hd)))}
+    if bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _project(p, x, H, K, hd):
+    B, S, _ = x.shape
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    return (shard_batch(q.reshape(B, S, H, hd)),
+            shard_batch(k.reshape(B, S, K, hd)),
+            shard_batch(v.reshape(B, S, K, hd)))
+
+
+# ----------------------------------------------------------------------
+# flash-style chunked attention (train / prefill)
+# ----------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024
+                    ) -> jnp.ndarray:
+    """q: [B,Sq,H,hd], k/v: [B,Sk,K,hd] (GQA). Returns [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = float(1.0 / np.sqrt(hd))
+    cq = _pick_chunk(Sq, q_chunk)
+    ck = _pick_chunk(Sk, kv_chunk)
+    if Sq % cq or Sk % ck or (cq == Sq and ck == Sk):
+        return _direct_attention(q, k, v, causal, window)
+    nq, nk = Sq // cq, Sk // ck
+    qr = (q * scale).reshape(B, nq, cq, K, G, hd).astype(jnp.float32)
+    kr = k.reshape(B, nk, ck, K, hd).astype(jnp.float32)
+    vr = v.reshape(B, nk, ck, K, hd).astype(jnp.float32)
+
+    def q_block(args):
+        qi, qc = args                                # scalar idx, [B,cq,K,G,hd]
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kc, vc = kr[:, j], vr[:, j]              # [B,ck,K,hd]
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qc, kc)   # [B,K,G,cq,ck]
+            kpos = j * ck + jnp.arange(ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m2 = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckh->bkgqh", p, vc)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, K, G, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, K, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, cq, hd), jnp.float32)
+        # checkpoint the kv step: backward recomputes score tiles instead
+        # of saving the full [nq,nk,B,H,cq,ck] score tensor (flash-bwd)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B,K,G,cq,hd]
+        return out.transpose(0, 3, 1, 2, 4)            # [B,cq,K,G,hd]
+
+    outs = jax.lax.map(jax.checkpoint(q_block),
+                       (jnp.arange(nq),
+                        qr.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def _direct_attention(q, k, v, causal, window):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = float(1.0 / np.sqrt(hd))
+    qr = (q * scale).reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k.astype(jnp.float32))
+    qpos, kpos = jnp.arange(Sq), jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None] + (k.shape[1] - Sq)
+    if window > 0:
+        mask &= (qpos[:, None] + (k.shape[1] - Sq)) - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# decode attention over a dense KV cache
+# ----------------------------------------------------------------------
+
+def decode_attention(q1: jnp.ndarray, kc: jnp.ndarray, vc: jnp.ndarray,
+                     pos: jnp.ndarray, window: int = 0) -> jnp.ndarray:
+    """q1: [B,1,H,hd]; kc/vc: [B,Sc,K,hd]; pos: int32[B] (# valid entries,
+    inclusive of the token just written). Returns [B,1,H,hd]."""
+    B, _, H, hd = q1.shape
+    Sc, K = kc.shape[1], kc.shape[2]
+    G = H // K
+    scale = float(1.0 / np.sqrt(hd))
+    qr = (q1[:, 0] * scale).reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qr, kc.astype(jnp.float32))
+    kpos = jnp.arange(Sc)[None, :]
+    mask = kpos < pos[:, None]
+    if window > 0:
+        mask &= kpos >= pos[:, None] - window
+    s = jnp.where(mask[:, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vc.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q1.dtype)
+
+
+# ----------------------------------------------------------------------
+# module-level self/cross attention
+# ----------------------------------------------------------------------
+
+def self_attention(p: dict, x: jnp.ndarray, *, H: int, K: int, hd: int,
+                   rope_theta: float, use_rope: bool, causal: bool = True,
+                   window: int = 0, mode: str = "train",
+                   cache: dict | None = None, pos: jnp.ndarray | None = None,
+                   q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Returns (out [B,S,d], new_cache_or_None)."""
+    B, S, _ = x.shape
+    q, k, v = _project(p, x, H, K, hd)
+    if mode == "decode":
+        positions = pos.astype(jnp.int32)[:, None]         # [B,1]
+    else:
+        positions = jnp.arange(S)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        bidx = jnp.arange(B)
+        kc = cache["k"].at[bidx, pos].set(k[:, 0])
+        vc = cache["v"].at[bidx, pos].set(v[:, 0])
+        out = decode_attention(q, kc, vc, pos + 1, window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    out = shard_batch(out)
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def cross_attention(p: dict, x: jnp.ndarray, enc_kv: dict, *, H: int,
+                    K: int, hd: int) -> jnp.ndarray:
+    """Decoder->encoder attention; enc_kv holds projected K/V [B,Se,K,hd]."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)).reshape(B, S, H, hd)
+    if S > 1:
+        out = flash_attention(q, enc_kv["k"], enc_kv["v"], causal=False,
+                              window=0, q_chunk=512, kv_chunk=512)
+    else:
+        out = _direct_attention(q, enc_kv["k"], enc_kv["v"], causal=False,
+                                window=0)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def project_enc_kv(p: dict, enc_out: jnp.ndarray, K: int, hd: int) -> dict:
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ p["wk"] + (p["bk"] if "bk" in p else 0.0))
+    v = (enc_out @ p["wv"] + (p["bv"] if "bv" in p else 0.0))
+    return {"k": k.reshape(B, Se, K, hd), "v": v.reshape(B, Se, K, hd)}

@@ -1,0 +1,135 @@
+"""Paged KV-cache block manager — ACGraph's block-centric design applied
+to LM serving (DESIGN.md Sec. 3.1).
+
+Mapping onto the paper's components:
+
+  disk blocks      -> KV pages ([page, kv_heads*head_dim] per layer)
+  buffer pool      -> fixed physical page pool in HBM (free list)
+  worklist         -> per-sequence block tables + LRU/priority stamps
+  uncached blocks  -> pages offloaded to the host tier ("disk")
+  reactivation     -> re-attending a resident page: zero transfer, counted
+                      as a reuse hit (the paper's cached-queue dominance)
+
+The manager is host-side control logic (like the paper's scheduler
+threads); attention over resident pages runs through the Pallas paged
+kernel (``kernels/paged_attention.py``) or its jnp oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PageStats:
+    allocations: int = 0
+    evictions: int = 0
+    offload_bytes: int = 0
+    reload_bytes: int = 0
+    reuse_hits: int = 0
+
+
+class PagedKVManager:
+    """Physical page pool shared by many sequences, per layer."""
+
+    def __init__(self, *, n_physical: int, page: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.page = page
+        self.n_physical = n_physical
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        width = kv_heads * head_dim
+        self.k_pages = np.zeros((n_physical, page, width), np.float32)
+        self.v_pages = np.zeros((n_physical, page, width), np.float32)
+        self.free: list[int] = list(range(n_physical))[::-1]
+        # logical maps: (seq, logical_page) -> physical page or 'host'
+        self.tables: dict[int, list[int]] = {}
+        self.host_store: dict[tuple[int, int], tuple[np.ndarray,
+                                                     np.ndarray]] = {}
+        self.stamp: dict[int, int] = {}     # phys page -> last-use tick
+        self.owner: dict[int, tuple[int, int]] = {}
+        self.tick = 0
+        self.lens: dict[int, int] = {}
+        self.stats = PageStats()
+
+    # ------------------------------------------------------------------
+    def _page_bytes(self) -> int:
+        return self.page * self.kv_heads * self.head_dim * 2 * 4
+
+    def _evict_one(self) -> int:
+        """Evict the least-recently-used resident page to the host tier."""
+        victim = min(self.stamp, key=self.stamp.get)
+        seq, lp = self.owner.pop(victim)
+        self.host_store[(seq, lp)] = (self.k_pages[victim].copy(),
+                                      self.v_pages[victim].copy())
+        self.tables[seq][lp] = -1
+        del self.stamp[victim]
+        self.stats.evictions += 1
+        self.stats.offload_bytes += self._page_bytes()
+        return victim
+
+    def _alloc_phys(self) -> int:
+        if self.free:
+            return self.free.pop()
+        return self._evict_one()
+
+    def _bind(self, seq: int, lp: int, phys: int) -> None:
+        self.tables[seq][lp] = phys
+        self.owner[phys] = (seq, lp)
+        self.stamp[phys] = self.tick
+
+    # ------------------------------------------------------------------
+    def ensure_resident(self, seq: int, lp: int) -> int:
+        """Fetch a page into the pool (ACGraph preload); returns phys id."""
+        self.tick += 1
+        table = self.tables.setdefault(seq, [])
+        while len(table) <= lp:
+            table.append(-1)
+        phys = table[lp]
+        if phys >= 0:
+            self.stamp[phys] = self.tick
+            self.stats.reuse_hits += 1
+            return phys
+        phys = self._alloc_phys()
+        if (seq, lp) in self.host_store:
+            k, v = self.host_store.pop((seq, lp))
+            self.k_pages[phys], self.v_pages[phys] = k, v
+            self.stats.reload_bytes += self._page_bytes()
+        else:
+            self.k_pages[phys] = 0.0
+            self.v_pages[phys] = 0.0
+            self.stats.allocations += 1
+        self._bind(seq, lp, phys)
+        return phys
+
+    def write_token(self, seq: int, pos: int, k: np.ndarray,
+                    v: np.ndarray) -> None:
+        """k/v: [kv_heads*head_dim] for one token."""
+        lp, off = divmod(pos, self.page)
+        phys = self.ensure_resident(seq, lp)
+        self.k_pages[phys, off] = k
+        self.v_pages[phys, off] = v
+        self.lens[seq] = max(self.lens.get(seq, 0), pos + 1)
+
+    def gather_tables(self, seqs: list[int]) -> tuple[np.ndarray,
+                                                      np.ndarray]:
+        """Make every page of the given sequences resident; returns
+        (block_table int32 [B, max_pages], lens int32 [B])."""
+        max_pages = max(-(-self.lens.get(s, 1) // self.page)
+                        for s in seqs)
+        table = np.zeros((len(seqs), max_pages), np.int32)
+        lens = np.zeros(len(seqs), np.int32)
+        for i, s in enumerate(seqs):
+            n = -(-self.lens.get(s, 1) // self.page)
+            for lp in range(n):
+                table[i, lp] = self.ensure_resident(s, lp)
+            lens[i] = self.lens.get(s, 0)
+        return table, lens
+
+    def residency(self) -> float:
+        total = sum(len(t) for t in self.tables.values())
+        resident = sum(1 for t in self.tables.values()
+                       for p in t if p >= 0)
+        return resident / max(total, 1)

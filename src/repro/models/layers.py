@@ -1,0 +1,120 @@
+"""Shared layer primitives: norms, RoPE, FFN, embeddings, chunked loss.
+
+Activation-memory discipline: the big-vocab cross-entropy is chunked over
+the sequence (re-materialized in backward) so per-device live logits stay
+bounded — required for the 262k-vocab archs to fit the dry-run memory
+budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(
+        jnp.float32))).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2,
+                                      dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# feed-forward
+# ----------------------------------------------------------------------
+
+def ffn_init(rng, d_model: int, d_ff: int, gated: bool, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    p = {"wi": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+         "wo": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+    if gated:
+        p["wg"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def ffn_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = act_fn(act)(x @ p["wg"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ p["wo"]
+
+
+# ----------------------------------------------------------------------
+# embedding + chunked cross-entropy
+# ----------------------------------------------------------------------
+
+def embed_init(rng, vocab: int, d_model: int, dtype) -> Params:
+    return {"tok": jax.random.normal(rng, (vocab, d_model), dtype) * 0.02}
+
+
+def embed_apply(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def chunked_ce_loss(x: jnp.ndarray, lm_head: jnp.ndarray,
+                    targets: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Cross entropy with logits materialized one S-chunk at a time.
+
+    x: [B, S, d]; lm_head: [d, V]; targets: int32 [B, S] (-1 = masked).
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(args):
+        xc, tc = args
+        logits = (xc @ lm_head).astype(jnp.float32)        # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        mask = (tc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - tgt) * mask), jnp.sum(mask)
+
+    one = jax.checkpoint(one)
+    xm = x[:, :n * chunk].reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    tm = targets[:, :n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    losses, counts = jax.lax.map(one, (xm, tm))
+    total, cnt = jnp.sum(losses), jnp.sum(counts)
+    if rem:
+        l2, c2 = one((x[:, n * chunk:], targets[:, n * chunk:]))
+        total, cnt = total + l2, cnt + c2
+    return total / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Routing = top-k softmax; dispatch gathers tokens into a fixed
+[E, C, d] buffer via an argsort over expert assignments (fixed shapes, no
+dense [B,S,E,C] one-hot, so HLO FLOPs stay ~ active-expert FLOPs — this is
+what keeps MODEL_FLOPS/HLO_FLOPs honest for the MoE archs). Overflowing
+tokens beyond capacity C are dropped (standard capacity-factor semantics).
+
+Shared experts (Qwen2-MoE) are a dense gated FFN over all tokens, added to
+the routed output. A load-balance auxiliary loss (Switch-style) is
+returned for the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import pspec
+from repro.models.layers import act_fn
+
+
+def moe_init(rng, d_model: int, d_ff: int, num_experts: int,
+             num_shared: int, dtype) -> dict:
+    ks = jax.random.split(rng, 7)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, num_experts),
+                                    jnp.float32) * s_in,
+        "wi": jax.random.normal(ks[1], (num_experts, d_model, d_ff),
+                                dtype) * s_in,
+        "wg": jax.random.normal(ks[2], (num_experts, d_model, d_ff),
+                                dtype) * s_in,
+        "wo": jax.random.normal(ks[3], (num_experts, d_ff, d_model),
+                                dtype) * s_out,
+    }
+    if num_shared > 0:
+        sh = num_shared * d_ff
+        p["swi"] = jax.random.normal(ks[4], (d_model, sh), dtype) * s_in
+        p["swg"] = jax.random.normal(ks[5], (d_model, sh), dtype) * s_in
+        p["swo"] = jax.random.normal(ks[6], (sh, d_model), dtype) \
+            * (float(1.0 / np.sqrt(sh)))
+    return p
+
+
+def capacity(num_tokens: int, top_k: int, num_experts: int,
+             factor: float = 1.25, multiple: int = 8) -> int:
+    c = int(np.ceil(num_tokens * top_k * factor / num_experts))
+    return max(multiple, -(-c // multiple) * multiple)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, *, top_k: int, act: str = "silu",
+              capacity_factor: float = 1.25
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d] -> (out [B,S,d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E = p["wi"].shape[0]
+    T = B * S
+    xt = x.reshape(T, d)
+    C = capacity(T, top_k, E, capacity_factor)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # [T,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_e = gate_idx.reshape(-1)                            # [T*k]
+    order = jnp.argsort(flat_e)                              # stable
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(T * top_k) - starts[sorted_e]
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)       # sentinel slot
+    token_of = order // top_k
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xt[token_of])
+    eb = buf[:E * C].reshape(E, C, d)
+    eb = pspec.shard_moe_buffer(eb, dim=1)
+    h = jnp.einsum("ecd,edf->ecf", eb, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", eb, p["wg"])
+    h = pspec.shard_moe_buffer(act_fn(act)(g) * h, dim=1)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, d)
+
+    w = gate_vals.reshape(-1)[order].astype(x.dtype)
+    contrib = out_e[jnp.minimum(dest, E * C - 1)] * w[:, None] \
+        * keep[:, None].astype(x.dtype)
+    yt = jnp.zeros((T, d), x.dtype).at[token_of].add(contrib)
+
+    # shared experts (dense path over all tokens)
+    if "swi" in p:
+        hs = act_fn(act)(xt @ p["swg"]) * (xt @ p["swi"])
+        yt = yt + hs @ p["swo"]
+
+    # Switch-style load-balance loss
+    frac = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32),
+                    axis=0)
+    imp = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return yt.reshape(B, S, d), aux

@@ -1,0 +1,97 @@
+"""Activation sharding constraints.
+
+GSPMD propagation can flip-flop between batch-sharded and head-sharded
+activation layouts (emitting "involuntary full rematerialization"
+replication, observed on the whisper/train_4k cell — see EXPERIMENTS.md
+§Perf). Pinning activations to batch sharding at layer boundaries keeps
+propagation stable; weights stay sharded per ``models/sharding.py``.
+
+No-op when no mesh context is active (CPU smoke tests) or when dims don't
+divide the mesh axes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+try:  # classic global-mesh context (`with mesh:`)
+    from jax._src import mesh as _mesh_lib
+except Exception:                                        # pragma: no cover
+    _mesh_lib = None
+
+
+def current_mesh():
+    if _mesh_lib is None:
+        return None
+    try:
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:                                    # pragma: no cover
+        return None
+
+
+#: beyond-paper variant (EXPERIMENTS.md §Perf): additionally shard the
+#: trailing feature dim of activations over 'model' so remat-saved layer
+#: inputs shrink mesh_model-fold (sequence/tensor-parallel activations).
+_ACT_MODEL_SHARDING = False
+
+
+def set_act_model_sharding(on: bool) -> None:
+    global _ACT_MODEL_SHARDING
+    _ACT_MODEL_SHARDING = on
+
+
+#: beyond-paper variant (EXPERIMENTS.md §Perf): shard the MoE dispatch
+#: buffer's capacity dim over (pod, data) so expert-matmul partial sums
+#: all-reduce 1/16th the bytes.
+_MOE_DISPATCH_SHARDING = False
+
+
+def set_moe_dispatch_sharding(on: bool) -> None:
+    global _MOE_DISPATCH_SHARDING
+    _MOE_DISPATCH_SHARDING = on
+
+
+def shard_moe_buffer(x, dim: int = 1):
+    """Constrain an [E, C, ...] dispatch buffer's capacity dim."""
+    if not _MOE_DISPATCH_SHARDING:
+        return x
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    if nb <= 1 or x.shape[dim] % nb:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = baxes if len(baxes) > 1 else baxes[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_batch(x, seq_dim: int | None = 1):
+    """Constrain a [B, ...] activation to batch sharding over (pod, data).
+
+    Falls back to sequence sharding over ``data`` (context parallelism)
+    when the batch is unshardable (B=1 long-context cells).
+    """
+    mesh = current_mesh()
+    if mesh is None or x.ndim < 1:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    spec = [None] * x.ndim
+    if nb > 1 and x.shape[0] % nb == 0 and x.shape[0] > 1:
+        spec[0] = baxes if len(baxes) > 1 else baxes[0]
+    elif (seq_dim is not None and x.ndim > seq_dim and "data" in sizes
+          and x.shape[seq_dim] % sizes["data"] == 0
+          and x.shape[seq_dim] >= 2 * sizes["data"]):
+        spec[seq_dim] = "data"
+    if (_ACT_MODEL_SHARDING and "model" in sizes and x.ndim >= 3
+            and spec[-1] is None and x.shape[-1] >= 2048
+            and x.shape[-1] % sizes["model"] == 0):
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))

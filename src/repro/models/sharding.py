@@ -1,0 +1,151 @@
+"""Sharding rules: pytree path + shape -> PartitionSpec.
+
+Greedy, divisibility-checked assignment (documented in DESIGN.md Sec. 6):
+
+  * parameters: the largest dimension shards over ``model`` (TP), the next
+    over ``data`` (FSDP/ZeRO-style); dims below ``min_size`` or not
+    divisible stay replicated. The leading stacked-scan axis of segment
+    parameters is never sharded. The ``pod`` axis is pure DP (params
+    replicated across pods).
+  * activations/batch: global batch shards over ``(pod, data)``.
+  * caches: batch first; if batch is unshardable (e.g. long_500k B=1) the
+    sequence dimension shards over ``data`` (context parallelism) and the
+    largest remaining dim over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _assign(shape, mesh: Mesh, axis_order, min_size: int = 256,
+            skip: int = 0) -> P:
+    sizes = _mesh_axis_sizes(mesh)
+    spec: list[Any] = [None] * len(shape)
+    dims = sorted(range(skip, len(shape)), key=lambda i: -shape[i])
+    avail = [a for a in axis_order if a in sizes]
+    for d in dims:
+        if not avail:
+            break
+        for ax in list(avail):
+            if shape[d] >= min_size and shape[d] % sizes[ax] == 0:
+                spec[d] = ax
+                avail.remove(ax)
+                break
+    return P(*spec)
+
+
+def _is_segment_path(path) -> bool:
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey) and k.key == "segments":
+            return True
+    return False
+
+
+def param_specs(abstract_params, mesh: Mesh, mode: str = "fsdp",
+                expert_parallel: bool = False):
+    """PartitionSpec pytree for parameters (and optimizer moments).
+
+    mode='fsdp' (baseline): largest dim -> model, next -> data.
+    mode='tp' (inference variant): model axis only — no per-step weight
+    all-gathers; params replicate over data (fine without optimizer
+    state). expert_parallel routes MoE expert stacks [E, d, ff] to
+    P(data, None, model) when E divides the data axis (EP).
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    axes = {"tp": ("model",),
+            "fsdp": ("model", "data"),
+            # ZeRO across pods: params+moments shard over all three axes
+            "fsdp-zpod": ("model", "data", "pod")}[mode]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) < 2:
+            return P()
+        skip = 1 if _is_segment_path(path) else 0
+        if len(shape) - skip < 2:
+            return P()
+        if expert_parallel and _is_expert_path(path) \
+                and len(shape) - skip == 3 and "data" in sizes \
+                and shape[skip] % sizes["data"] == 0:
+            sub_axes = ("model", "pod") if mode == "fsdp-zpod" \
+                else ("model",)
+            sub = _assign(shape[skip + 1:], mesh, sub_axes, min_size=2)
+            return P(*([None] * skip), "data", *sub)
+        spec = _assign(shape, mesh, axes, skip=skip)
+        if mode == "fsdp-zpod" and "pod" in sizes:
+            # 2D params: co-shard the data-assigned dim over (data, pod)
+            # so optimizer state also splits across pods (ZeRO)
+            parts = list(spec)
+            for i, ax in enumerate(parts):
+                if ax == "data" and shape[i] % (sizes["data"]
+                                                * sizes["pod"]) == 0:
+                    parts[i] = ("data", "pod")
+                    break
+            spec = P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def _is_expert_path(path) -> bool:
+    keys = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+    return "moe" in keys and any(k in ("wi", "wg", "wo") for k in keys)
+
+
+def batch_spec(shape, mesh: Mesh) -> P:
+    """Token/label batches [B, S] (or frame/patch embeds [B, S, d])."""
+    sizes = _mesh_axis_sizes(mesh)
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    spec: list[Any] = [None] * len(shape)
+    if shape[0] % nb == 0 and nb > 1:
+        spec[0] = baxes if len(baxes) > 1 else baxes[0]
+    return P(*spec)
+
+
+def cache_specs(abstract_cache, mesh: Mesh):
+    """KV caches / recurrent states."""
+    sizes = _mesh_axis_sizes(mesh)
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+
+    def one(path, leaf):
+        shape = leaf.shape
+        skip = 1 if _is_segment_path(path) else 0
+        s = shape[skip:]
+        spec: list[Any] = [None] * len(shape)
+        if not s:
+            return P(*spec)
+        used = set()
+        if s[0] % nb == 0 and nb > 1 and s[0] > 1:
+            spec[skip] = baxes if len(baxes) > 1 else baxes[0]
+            used.update(baxes)
+        elif len(s) >= 2 and "data" in sizes and s[1] >= 2 * sizes["data"] \
+                and s[1] % sizes["data"] == 0:
+            # context parallelism: shard the sequence axis
+            spec[skip + 1] = "data"
+            used.add("data")
+        if "model" in sizes:
+            # largest remaining dim over model
+            rest = sorted(range(len(s)), key=lambda i: -s[i])
+            for d in rest:
+                if spec[skip + d] is None and s[d] >= 256 \
+                        and s[d] % sizes["model"] == 0:
+                    spec[skip + d] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def to_named(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

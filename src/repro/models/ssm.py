@@ -1,0 +1,139 @@
+"""Mamba (S6 selective state space) block — used by jamba-1.5-large.
+
+Training/prefill uses a *chunked* associative scan: an outer `lax.scan`
+over sequence chunks carrying the [B, d_in, n] state, with a parallel
+associative scan inside each chunk. This bounds the live discretized-state
+tensor to [B, chunk, d_in, n] (the naive parallel form would materialize
+the full sequence worth — hundreds of GB at jamba scale). Decode is the
+O(1) single-step recurrence.
+
+The depthwise causal conv (width 4) is implemented as a sum of shifted
+arrays — cheap, and trivially carried as a [B, k-1, d_in] decode state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mamba_init(rng, d_model: int, *, expand: int = 2, state: int = 16,
+               conv_k: int = 4, dt_rank: int | None = None, dtype=jnp.bfloat16
+               ) -> dict:
+    din = expand * d_model
+    dtr = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(rng, 8)
+    s = float(1.0 / np.sqrt(d_model))
+    si = float(1.0 / np.sqrt(din))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * din), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (conv_k, din), dtype) * 0.5,
+        "conv_b": jnp.zeros((din,), dtype),
+        "wB": jax.random.normal(ks[2], (din, state), dtype) * si,
+        "wC": jax.random.normal(ks[3], (din, state), dtype) * si,
+        "wdt": jax.random.normal(ks[4], (din, dtr), dtype) * si,
+        "dt_proj": jax.random.normal(ks[5], (dtr, din), dtype)
+        * (float(1.0 / np.sqrt(dtr))),
+        "dt_bias": jnp.full((din,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.asarray(
+            np.log(np.tile(np.arange(1, state + 1, dtype=np.float32),
+                           (din, 1)))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": jax.random.normal(ks[6], (din, d_model), dtype) * si,
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x: [B,S,din]; w: [k,din]; prev: [B,k-1,din] decode context."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_inputs(p: dict, u: jnp.ndarray):
+    """u: [..., din] post-conv activations -> (dA_log, dBu, C)."""
+    dt = jax.nn.softplus((u @ p["wdt"]) @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)  # [...,din]
+    A = -jnp.exp(p["A_log"])                                  # [din,n]
+    Bm = (u @ p["wB"]).astype(jnp.float32)                    # [...,n]
+    Cm = (u @ p["wC"]).astype(jnp.float32)                    # [...,n]
+    dA = dt[..., None] * A                                    # [...,din,n]
+    dBu = (dt * u.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    return dA, dBu, Cm
+
+
+def mamba_apply(p: dict, x: jnp.ndarray, chunk: int = 64,
+                return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d] (training / prefill path).
+
+    With ``return_state`` also returns the end-of-sequence decode cache
+    (conv context + SSM state) so prefill can hand off to decode."""
+    B, S, d = x.shape
+    din = p["out_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    c = min(chunk, S)
+    if S % c:
+        c = S  # irregular: single chunk
+    nch = S // c
+    uc = u.reshape(B, nch, c, din).transpose(1, 0, 2, 3)   # [nch,B,c,din]
+
+    def chunk_step(h, u_ch):
+        dA, dBu, Cm = _ssm_inputs(p, u_ch)                 # [B,c,din,n]
+        a = jnp.exp(dA)
+
+        def comb(l, r):
+            return (l[0] * r[0], l[1] * r[0] + r[1])
+
+        aa, hh = jax.lax.associative_scan(comb, (a, dBu), axis=1)
+        hh = hh + aa * h[:, None]                          # add carry
+        y = jnp.einsum("bcdn,bcn->bcd", hh, Cm)
+        h_new = hh[:, -1]
+        return h_new, y
+
+    chunk_step = jax.checkpoint(chunk_step)
+    h0 = jnp.zeros((B, din, Cm_dim(p)), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_step, h0, uc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, din)
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = p["conv_w"].shape[0]
+        cache = {"conv": xi[:, S - (k - 1):], "h": h_fin}
+        return out, cache
+    return out
+
+
+def Cm_dim(p: dict) -> int:
+    return p["A_log"].shape[1]
+
+
+def mamba_init_cache(p: dict, batch: int, dtype=jnp.bfloat16) -> dict:
+    din, n = p["A_log"].shape
+    k = p["conv_w"].shape[0]
+    return {"conv": jnp.zeros((batch, k - 1, din), dtype),
+            "h": jnp.zeros((batch, din, n), jnp.float32)}
+
+
+def mamba_decode(p: dict, x1: jnp.ndarray, cache: dict
+                 ) -> tuple[jnp.ndarray, dict]:
+    """x1: [B,1,d] single-token step -> ([B,1,d], new cache)."""
+    B = x1.shape[0]
+    xz = x1 @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_ctx = cache["conv"]
+    u = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"], conv_ctx))
+    new_conv = jnp.concatenate([conv_ctx[:, 1:], xi], axis=1)
+    dA, dBu, Cm = _ssm_inputs(p, u[:, 0])                  # [B,din,n]/[B,n]
+    h = jnp.exp(dA) * cache["h"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + u[:, 0].astype(jnp.float32) \
+        * p["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x1.dtype)
+    return (y @ p["out_proj"])[:, None], {"conv": new_conv, "h": h}

@@ -1,0 +1,507 @@
+"""Model assembly: heterogeneous layer stacks compiled as scanned segments.
+
+A model = embedding -> [segments: scan over `unit_repeat` copies of a
+heterogeneous unit (params stacked on the repeat axis)] -> tail layers
+(unrolled) -> final norm -> lm head. Supports three modes:
+
+  * ``train``   — full-sequence forward (no caches), remat per unit,
+  * ``prefill`` — forward that also emits per-layer KV/state caches,
+  * ``decode``  — one-token step updating caches in place.
+
+Whisper adds a non-causal encoder and per-decoder-layer cross-attention
+(encoder K/V projected once at prefill and carried in the cache). The VLM
+stub prepends projected patch embeddings to the token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (chunked_ce_loss, embed_apply, embed_init,
+                                 ffn_apply, ffn_init, rms_norm)
+from repro.models.pspec import shard_batch
+
+Params = dict
+
+
+def sinusoidal_positions(max_pos: int, d: int) -> np.ndarray:
+    pos = np.arange(max_pos)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1
+                          ).astype(np.float32)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # parameter init
+    # ------------------------------------------------------------------
+
+    def _layer_init(self, rng, spec: LayerSpec, cross: bool) -> Params:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        ks = iter(jax.random.split(rng, 8))
+        p: Params = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+        if spec.kind == "attn":
+            p["attn"] = attn_lib.attention_init(
+                next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.head_dim, cfg.qkv_bias, dt)
+            if cross:
+                p["lnx"] = jnp.zeros((cfg.d_model,), dt)
+                p["xattn"] = attn_lib.attention_init(
+                    next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.head_dim, cfg.qkv_bias, dt)
+        elif spec.kind == "mamba":
+            p["mamba"] = ssm_lib.mamba_init(
+                next(ks), cfg.d_model, expand=cfg.ssm_expand,
+                state=cfg.ssm_state, conv_k=cfg.ssm_conv, dtype=dt)
+        elif spec.kind == "mlstm":
+            p["cell"] = xlstm_lib.mlstm_init(
+                next(ks), cfg.d_model, cfg.num_heads,
+                expand=cfg.xlstm_expand, dtype=dt)
+        elif spec.kind == "slstm":
+            p["cell"] = xlstm_lib.slstm_init(next(ks), cfg.d_model,
+                                             cfg.num_heads, dt)
+        if spec.ffn == "dense":
+            p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+            p["ffn"] = ffn_init(next(ks), cfg.d_model, cfg.d_ff,
+                                cfg.ffn_gated, dt)
+        elif spec.ffn == "moe":
+            p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+            p["moe"] = moe_lib.moe_init(next(ks), cfg.d_model, cfg.moe_d_ff,
+                                        cfg.moe_experts, cfg.moe_shared, dt)
+        return p
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        keys = iter(jax.random.split(rng, 16))
+        params: Params = {"embed": embed_init(next(keys), cfg.vocab,
+                                              cfg.d_model, dt)}
+        cross = cfg.is_encdec
+
+        def stack_unit(rng2, specs, repeat, cross_):
+            def one(r):
+                ks = jax.random.split(r, len(specs))
+                return tuple(self._layer_init(k, s, cross_)
+                             for k, s in zip(ks, specs))
+            return jax.vmap(one)(jax.random.split(rng2, repeat))
+
+        params["segments"] = (stack_unit(next(keys), cfg.unit,
+                                         cfg.unit_repeat, cross),)
+        params["tail"] = tuple(self._layer_init(next(keys), s, cross)
+                               for s in cfg.tail)
+        params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                next(keys), (cfg.d_model, cfg.vocab), dt) * 0.02
+        if cfg.is_encdec:
+            enc_spec = LayerSpec(kind="attn", ffn="dense")
+            params["encoder"] = {
+                "segments": (stack_unit(next(keys), (enc_spec,),
+                                        cfg.encoder_layers, False),),
+                "final_norm": jnp.zeros((cfg.d_model,), dt),
+            }
+        if cfg.num_patches > 0:
+            params["vlm_proj"] = jax.random.normal(
+                next(keys), (cfg.d_model, cfg.d_model), dt) \
+                * float(1.0 / np.sqrt(cfg.d_model))
+        return params
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+
+    def _layer_cache(self, spec: LayerSpec, batch: int, seq: int,
+                     cross: bool) -> Params:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        c: Params = {}
+        if spec.kind == "attn":
+            c["attn"] = {
+                "k": jnp.zeros((batch, seq, cfg.num_kv_heads, cfg.head_dim),
+                               dt),
+                "v": jnp.zeros((batch, seq, cfg.num_kv_heads, cfg.head_dim),
+                               dt)}
+            if cross:
+                c["xkv"] = {
+                    "k": jnp.zeros((batch, cfg.enc_seq, cfg.num_kv_heads,
+                                    cfg.head_dim), dt),
+                    "v": jnp.zeros((batch, cfg.enc_seq, cfg.num_kv_heads,
+                                    cfg.head_dim), dt)}
+        elif spec.kind == "mamba":
+            din = cfg.ssm_expand * cfg.d_model
+            c["mamba"] = {
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din), dt),
+                "h": jnp.zeros((batch, din, cfg.ssm_state), jnp.float32)}
+        elif spec.kind == "mlstm":
+            din = cfg.xlstm_expand * cfg.d_model
+            dh = din // cfg.num_heads
+            c["cell"] = {
+                "C": jnp.zeros((batch, cfg.num_heads, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, cfg.num_heads, dh), jnp.float32),
+                "m": jnp.full((batch, cfg.num_heads), -1e30, jnp.float32)}
+        elif spec.kind == "slstm":
+            z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+            c["cell"] = {"h": z, "c": z, "n": z,
+                         "m": jnp.full((batch, cfg.d_model), -1e30,
+                                       jnp.float32)}
+        return c
+
+    def init_cache(self, batch: int, seq: int) -> Params:
+        cfg = self.cfg
+        cross = cfg.is_encdec
+
+        def unit_cache(_):
+            return tuple(self._layer_cache(s, batch, seq, cross)
+                         for s in cfg.unit)
+
+        seg = jax.vmap(unit_cache)(jnp.arange(cfg.unit_repeat))
+        tail = tuple(self._layer_cache(s, batch, seq, cross)
+                     for s in cfg.tail)
+        return {"segments": (seg,), "tail": tail}
+
+    # ------------------------------------------------------------------
+    # layer application
+    # ------------------------------------------------------------------
+
+    def _apply_layer(self, spec: LayerSpec, p: Params, x, *, mode: str,
+                     cache: Params | None, pos, causal: bool = True):
+        cfg = self.cfg
+        new_cache: Params = {}
+        aux = jnp.zeros((), jnp.float32)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if spec.kind == "attn":
+            window = cfg.local_window if spec.attn == "local" else 0
+            out, nc = attn_lib.self_attention(
+                p["attn"], h, H=cfg.num_heads, K=cfg.num_kv_heads,
+                hd=cfg.head_dim, rope_theta=cfg.rope_theta,
+                use_rope=cfg.use_rope, causal=causal, window=window,
+                mode=mode, cache=None if cache is None else cache["attn"],
+                pos=pos, q_chunk=cfg.attn_q_chunk,
+                kv_chunk=cfg.attn_kv_chunk)
+            x = x + out
+            if nc is not None:
+                new_cache["attn"] = nc
+            if cfg.is_encdec and "xattn" in p:
+                hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+                xkv = cache["xkv"] if (cache is not None and "xkv" in cache) \
+                    else None
+                if xkv is not None:
+                    x = x + attn_lib.cross_attention(
+                        p["xattn"], hx, xkv, H=cfg.num_heads,
+                        K=cfg.num_kv_heads, hd=cfg.head_dim)
+                    new_cache["xkv"] = xkv
+        elif spec.kind == "mamba":
+            if mode == "train":
+                x = x + ssm_lib.mamba_apply(p["mamba"], h, cfg.mamba_chunk)
+            elif mode == "prefill":
+                out, nc = ssm_lib.mamba_apply(p["mamba"], h,
+                                              cfg.mamba_chunk,
+                                              return_state=True)
+                x = x + out
+                new_cache["mamba"] = {"conv": nc["conv"].astype(cfg.jdtype),
+                                      "h": nc["h"]}
+            else:
+                out, nc = ssm_lib.mamba_decode(p["mamba"], h,
+                                               cache["mamba"])
+                x = x + out
+                new_cache["mamba"] = nc
+        elif spec.kind == "mlstm":
+            if mode == "train":
+                x = x + xlstm_lib.mlstm_apply(p["cell"], h, cfg.num_heads,
+                                              cfg.mlstm_chunk)
+            elif mode == "prefill":
+                out, nc = xlstm_lib.mlstm_apply(p["cell"], h, cfg.num_heads,
+                                                cfg.mlstm_chunk,
+                                                return_state=True)
+                x = x + out
+                new_cache["cell"] = nc
+            else:
+                out, nc = xlstm_lib.mlstm_decode(p["cell"], h, cache["cell"],
+                                                 cfg.num_heads)
+                x = x + out
+                new_cache["cell"] = nc
+        elif spec.kind == "slstm":
+            if mode == "train":
+                x = x + xlstm_lib.slstm_apply(p["cell"], h, cfg.num_heads)
+            elif mode == "prefill":
+                out, nc = xlstm_lib.slstm_apply(p["cell"], h, cfg.num_heads,
+                                                return_state=True)
+                x = x + out
+                new_cache["cell"] = nc
+            else:
+                out, nc = xlstm_lib.slstm_decode(p["cell"], h, cache["cell"],
+                                                 cfg.num_heads)
+                x = x + out
+                new_cache["cell"] = nc
+        if spec.ffn != "none" and ("ffn" in p or "moe" in p):
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if spec.ffn == "moe":
+                out2, aux = moe_lib.moe_apply(p["moe"], h2,
+                                              top_k=cfg.moe_top_k,
+                                              act=cfg.act)
+            else:
+                out2 = ffn_apply(p["ffn"], h2, cfg.act)
+            x = x + out2
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # stacks
+    # ------------------------------------------------------------------
+
+    def _run_stack(self, params, x, *, mode: str, caches=None, pos=None,
+                   causal: bool = True, remat: bool = True):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {"segments": [], "tail": []}
+
+        for si, seg_params in enumerate(params["segments"]):
+            seg_cache = None if caches is None else caches["segments"][si]
+
+            def unit_body(x_aux, xs):
+                x_, aux_ = x_aux
+                p_r, c_r = xs
+                ncs = []
+                x_ = shard_batch(x_)
+                for li, spec in enumerate(cfg.unit):
+                    c_l = None if c_r is None else c_r[li]
+                    x_, nc, aux = self._apply_layer(
+                        spec, p_r[li], x_, mode=mode, cache=c_l, pos=pos,
+                        causal=causal)
+                    x_ = shard_batch(x_)
+                    ncs.append(nc)
+                return (x_, aux_ + aux), tuple(ncs)
+
+            body = unit_body
+            if mode == "train" and remat:
+                body = jax.checkpoint(unit_body)
+            (x, aux_total), seg_new = jax.lax.scan(
+                body, (x, aux_total),
+                (seg_params, seg_cache))
+            new_caches["segments"].append(seg_new)
+
+        for li, spec in enumerate(cfg.tail):
+            c_l = None if caches is None else caches["tail"][li]
+            x, nc, aux = self._apply_layer(spec, params["tail"][li], x,
+                                           mode=mode, cache=c_l, pos=pos,
+                                           causal=causal)
+            aux_total = aux_total + aux
+            new_caches["tail"].append(nc)
+        new_caches["segments"] = tuple(new_caches["segments"])
+        new_caches["tail"] = tuple(new_caches["tail"])
+        return x, new_caches, aux_total
+
+    def _encode(self, params, enc_frames):
+        """Whisper encoder over precomputed conv-frontend frames (stub)."""
+        cfg = self.cfg
+        pos = sinusoidal_positions(enc_frames.shape[1], cfg.d_model)
+        x = enc_frames + jnp.asarray(pos, enc_frames.dtype)
+        # encoder runs the same machinery with a non-causal single segment
+        x, _, _ = Model(_encoder_cfg(cfg))._run_stack(
+            params["encoder"], x, mode="train", causal=False, remat=True)
+        return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def _lm_head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["tok"].T
+        return params["lm_head"]
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], batch["tokens"])
+        if cfg.num_patches > 0:
+            pe = batch["patch_embeds"].astype(x.dtype) @ params["vlm_proj"]
+            x = jnp.concatenate([pe, x], axis=1)
+        if not cfg.use_rope:
+            pos = sinusoidal_positions(x.shape[1], cfg.d_model)
+            x = x + jnp.asarray(pos, x.dtype)
+        return shard_batch(x)
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        """batch: tokens [B,S](, targets [B,S], enc_frames, patch_embeds)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["enc_frames"])
+            # project encoder K/V once per decoder layer via cache path is
+            # prefill-only; in training we recompute cross K/V inside the
+            # layer from enc_out — carried via closure:
+            return self._encdec_loss(params, x, enc_out, batch)
+        x, _, aux = self._run_stack(params, x, mode="train")
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        targets = batch["targets"]
+        if cfg.num_patches > 0:
+            pad = jnp.full((targets.shape[0], cfg.num_patches), -1,
+                           targets.dtype)
+            targets = jnp.concatenate([pad, targets], axis=1)
+        ce = chunked_ce_loss(x, self._lm_head(params), targets,
+                             cfg.loss_chunk)
+        return ce + 0.01 * aux
+
+    def _encdec_loss(self, params, x, enc_out, batch):
+        cfg = self.cfg
+        # build per-layer cross KV "caches" from enc_out, then run decoder
+        caches = self._cross_caches(params, enc_out)
+        x, _, aux = self._run_stack(params, x, mode="train",
+                                    caches=caches)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        ce = chunked_ce_loss(x, self._lm_head(params), batch["targets"],
+                             cfg.loss_chunk)
+        return ce + 0.01 * aux
+
+    def _cross_caches(self, params, enc_out):
+        cfg = self.cfg
+
+        def seg_xkv(p_r):
+            def one(p_unit):
+                out = []
+                for li, spec in enumerate(cfg.unit):
+                    kv = attn_lib.project_enc_kv(
+                        p_unit[li]["xattn"], enc_out, cfg.num_kv_heads,
+                        cfg.head_dim)
+                    out.append({"xkv": kv, "attn": None})
+                return tuple(out)
+            return jax.vmap(one)(p_r)
+
+        segs = tuple(seg_xkv(sp) for sp in params["segments"])
+        tail = tuple({"xkv": attn_lib.project_enc_kv(
+            params["tail"][li]["xattn"], enc_out, cfg.num_kv_heads,
+            cfg.head_dim), "attn": None} for li in range(len(cfg.tail)))
+        return {"segments": segs, "tail": tail}
+
+    def prefill(self, params, batch, cache_len: int | None = None):
+        """Forward + emit caches sized [B, S(, ...)]. Returns
+        (last_logits [B, vocab], caches)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        caches = self.init_cache(B, cache_len or S)
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["enc_frames"])
+            xc = self._cross_caches(params, enc_out)
+            caches = _merge_xkv(caches, xc)
+        x, new_caches, _ = self._run_stack(params, x, mode="prefill",
+                                           caches=caches)
+        # prefill emits exact-length KV; pad/copy into the cache buffers
+        new_caches = _fit_caches(caches, new_caches)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (x @ self._lm_head(params))[:, 0].astype(jnp.float32)
+        return logits, new_caches
+
+    def decode(self, params, tokens1, pos, caches):
+        """tokens1: [B,1]; pos: int32[B]; returns (logits [B,vocab], caches).
+        """
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens1)
+        if not cfg.use_rope:
+            # compute sinusoidal embedding for the current positions only
+            d = cfg.d_model
+            i = jnp.arange(d // 2, dtype=jnp.float32)
+            ang = pos.astype(jnp.float32)[:, None] / (10000.0 ** (2 * i / d))
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe.astype(x.dtype)[:, None]
+        x, new_caches, _ = self._run_stack(params, x, mode="decode",
+                                           caches=caches, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x @ self._lm_head(params))[:, 0].astype(jnp.float32)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        shapes = jax.tree.leaves(self.abstract_params())
+        return int(sum(np.prod(s.shape) for s in shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k + shared experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.moe_experts == 0:
+            return total
+        expert_p = 3 * cfg.d_model * cfg.moe_d_ff     # wi+wg+wo per expert
+        n_moe_layers = (sum(1 for s in cfg.unit if s.ffn == "moe")
+                        * cfg.unit_repeat
+                        + sum(1 for s in cfg.tail if s.ffn == "moe"))
+        inactive = n_moe_layers * expert_p * (cfg.moe_experts
+                                              - cfg.moe_top_k)
+        return total - inactive
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses as dc
+    return dc.replace(cfg, unit=(LayerSpec(kind="attn", ffn="dense"),),
+                      unit_repeat=cfg.encoder_layers, tail=(),
+                      encoder_layers=0, use_rope=False, num_patches=0)
+
+
+def _merge_xkv(caches, xc):
+    """Copy cross-KV projections into the cache pytree."""
+    segs = [_overlay_xkv(seg, seg_x)
+            for seg, seg_x in zip(caches["segments"], xc["segments"])]
+    tail = tuple(_overlay_xkv_one(c, x)
+                 for c, x in zip(caches["tail"], xc["tail"]))
+    return {"segments": tuple(segs), "tail": tail}
+
+
+def _overlay_xkv(seg_cache, seg_x):
+    out = []
+    for li in range(len(seg_cache)):
+        c = dict(seg_cache[li])
+        if "xkv" in seg_x[li] and seg_x[li]["xkv"] is not None:
+            c["xkv"] = seg_x[li]["xkv"]
+        out.append(c)
+    return tuple(out)
+
+
+def _overlay_xkv_one(c, x):
+    c = dict(c)
+    if x.get("xkv") is not None:
+        c["xkv"] = x["xkv"]
+    return c
+
+
+def _fit_caches(buffers, produced):
+    """Place prefill-produced exact-length KV into (possibly longer) cache
+    buffers; recurrent states pass through."""
+    def fit(buf, new):
+        if new is None:
+            return buf
+        if buf.shape == new.shape:
+            return new.astype(buf.dtype)
+        # KV case: new [B, S, K, hd] into buf [B, Smax, K, hd]
+        return jax.lax.dynamic_update_slice(
+            buf, new.astype(buf.dtype), (0,) * buf.ndim)
+
+    def walk(buf, new):
+        if isinstance(buf, dict):
+            return {k: walk(buf[k], new.get(k) if isinstance(new, dict)
+                            else None) for k in buf}
+        if isinstance(buf, (tuple, list)):
+            return type(buf)(walk(b, n) for b, n in
+                             zip(buf, new or [None] * len(buf)))
+        return fit(buf, new)
+
+    return walk(buffers, produced)

@@ -1,0 +1,238 @@
+"""xLSTM blocks (mLSTM + sLSTM) — used by xlstm-1.3b.
+
+mLSTM (matrix memory, exponential gating) is computed in a *stabilized
+chunkwise* form: a sequential scan over sequence chunks carrying
+(C [B,H,dk,dv], n [B,H,dk], m [B,H]); within a chunk, gate cumsums +
+running maxima give numerically-stable intra-chunk attention-like scores
+([B,H,c,c]) plus a rank-per-step contribution from the carried state. The
+chunkwise form is validated against the sequential recurrence in the tests.
+
+sLSTM (scalar memory with true recurrent h_{t-1} dependency) has no
+parallel form; it is a `lax.scan` over time with block-diagonal (per-head)
+recurrent weights. Both expose O(1)-state decode steps, which is what
+makes xlstm-1.3b a `long_500k`-capable architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def mlstm_init(rng, d_model: int, num_heads: int, *, expand: int = 2,
+               dtype=jnp.bfloat16) -> dict:
+    din = expand * d_model
+    ks = jax.random.split(rng, 8)
+    s = float(1.0 / np.sqrt(d_model))
+    si = float(1.0 / np.sqrt(din))
+    return {
+        "up": jax.random.normal(ks[0], (d_model, 2 * din), dtype) * s,
+        "wq": jax.random.normal(ks[1], (din, din), dtype) * si,
+        "wk": jax.random.normal(ks[2], (din, din), dtype) * si,
+        "wv": jax.random.normal(ks[3], (din, din), dtype) * si,
+        "wi": jax.random.normal(ks[4], (din, num_heads), jnp.float32) * si,
+        "bi": jnp.zeros((num_heads,), jnp.float32),
+        "wf": jax.random.normal(ks[5], (din, num_heads), jnp.float32) * si,
+        "bf": jnp.full((num_heads,), 3.0, jnp.float32),  # open forget gates
+        "down": jax.random.normal(ks[6], (din, d_model), dtype) * si,
+    }
+
+
+def _mlstm_qkvif(p, xm, H):
+    B, S, din = xm.shape
+    dh = din // H
+    q = (xm @ p["wq"]).reshape(B, S, H, dh).astype(jnp.float32) \
+        * float(1.0 / np.sqrt(dh))
+    k = (xm @ p["wk"]).reshape(B, S, H, dh).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    xf = xm.astype(jnp.float32)
+    it = xf @ p["wi"] + p["bi"]                        # [B,S,H] log-input
+    ft = jax.nn.log_sigmoid(xf @ p["wf"] + p["bf"])    # [B,S,H] log-forget
+    return q, k, v, it, ft
+
+
+def mlstm_apply(p: dict, x: jnp.ndarray, num_heads: int,
+                chunk: int = 128, return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d] (chunkwise-parallel training path).
+
+    With ``return_state`` also returns the end-of-sequence (C, n, m)
+    decode cache."""
+    B, S, d = x.shape
+    up = x @ p["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    din = xm.shape[-1]
+    H, dh = num_heads, din // num_heads
+    q, k, v, it, ft = _mlstm_qkvif(p, xm, H)
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    n_ch = S // c
+
+    def resh(a):  # [B,S,...] -> [n_ch,B,c,...]
+        return a.reshape((B, n_ch, c) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    qs, ks, vs, its, fts = map(resh, (q, k, v, it, ft))
+
+    def chunk_step(carry, args):
+        C, n, m = carry                    # [B,H,dh,dh],[B,H,dh],[B,H]
+        qc, kc, vc, ic, fc = args          # [B,c,H,*]
+        cumf = jnp.cumsum(fc, axis=1)                        # [B,c,H]
+        g = ic - cumf                                        # [B,c,H]
+        r = jnp.maximum(jax.lax.cummax(g, axis=1), m[:, None])
+        m_j = cumf + r
+        inter = jnp.exp(m[:, None] - r)                      # [B,c,H]
+        # intra-chunk decay matrix D[j,tau] = exp(g[tau] - r[j]), tau <= j
+        Dlog = g[:, None, :, :] - r[:, :, None, :]           # [B,j,tau,H]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(Dlog), 0.0)
+        s = jnp.einsum("bjhd,bthd->bjth", qc, kc)            # [B,j,tau,H]
+        w = s * D
+        num = jnp.einsum("bjth,bthd->bjhd", w, vc) \
+            + inter[..., None] * jnp.einsum("bjhd,bhde->bjhe", qc, C)
+        # normalizer: n_j . q_j (stabilized)
+        den = jnp.einsum("bjth,bthd,bjhd->bjh", D, kc, qc) \
+            + inter * jnp.einsum("bhd,bjhd->bjh", n, qc)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # end-of-chunk carry
+        last_r = r[:, -1]                                    # [B,H]
+        decay_tau = jnp.exp(g - last_r[:, None])             # [B,c,H]
+        C_new = jnp.exp(m - last_r)[:, :, None, None] * C + jnp.einsum(
+            "bth,bthd,bthe->bhde", decay_tau, kc, vc)
+        n_new = jnp.exp(m - last_r)[:, :, None] * n + jnp.einsum(
+            "bth,bthd->bhd", decay_tau, kc)
+        m_new = m_j[:, -1]
+        return (C_new, n_new, m_new), h
+
+    chunk_step = jax.checkpoint(chunk_step)
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qs, ks, vs, its, fts))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, din)
+    out = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = out @ p["down"]
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_init_cache(p: dict, batch: int, num_heads: int) -> dict:
+    din = p["down"].shape[0]
+    dh = din // num_heads
+    return {"C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+            "m": jnp.full((batch, num_heads), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p: dict, x1: jnp.ndarray, cache: dict, num_heads: int
+                 ) -> tuple[jnp.ndarray, dict]:
+    """Single-token recurrence (O(1) state)."""
+    B = x1.shape[0]
+    up = x1 @ p["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    H = num_heads
+    q, k, v, it, ft = _mlstm_qkvif(p, xm, H)   # [B,1,H,dh]/[B,1,H]
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    it, ft = it[:, 0], ft[:, 0]
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    C2 = fs[..., None, None] * C + is_[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", k, v)
+    n2 = fs[..., None] * n + is_[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C2)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n2)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, -1)
+    out = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
+    return out @ p["down"], {"C": C2, "n": n2, "m": m_new}
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+
+def slstm_init(rng, d_model: int, num_heads: int, dtype=jnp.bfloat16
+               ) -> dict:
+    dh = d_model // num_heads
+    ks = jax.random.split(rng, 5)
+    s = float(1.0 / np.sqrt(d_model))
+    dff = int(d_model * 4 / 3)
+    return {
+        "W": jax.random.normal(ks[0], (d_model, 4 * d_model),
+                               jnp.float32) * s,
+        "R": jax.random.normal(ks[1], (num_heads, dh, 4 * dh),
+                               jnp.float32) * (float(1.0 * float(1.0 / np.sqrt(dh)))),
+        "b": jnp.zeros((4 * d_model,), jnp.float32),
+        "fwi": jax.random.normal(ks[2], (d_model, dff), dtype) * s,
+        "fwg": jax.random.normal(ks[3], (d_model, dff), dtype) * s,
+        "fwo": jax.random.normal(ks[4], (dff, d_model), dtype)
+        * (float(1.0 / np.sqrt(dff))),
+    }
+
+
+def _slstm_cell(p, xt, carry, H):
+    """xt: [B,d] fp32; carry = (h, c, n, m) each [B,d]."""
+    h, c, n, m = carry
+    B, d = xt.shape
+    dh = d // H
+    hr = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["R"])       # [B,H,4dh]
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    raw = xt @ p["W"] + rec + p["b"]
+    it, ftr, zt, ot = jnp.split(raw, 4, axis=-1)
+    ft = jax.nn.log_sigmoid(ftr)
+    m2 = jnp.maximum(ft + m, it)
+    i2 = jnp.exp(it - m2)
+    f2 = jnp.exp(ft + m - m2)
+    c2 = f2 * c + i2 * jnp.tanh(zt)
+    n2 = f2 * n + i2
+    h2 = jax.nn.sigmoid(ot) * c2 / jnp.maximum(n2, 1e-6)
+    return (h2, c2, n2, m2)
+
+
+def slstm_apply(p: dict, x: jnp.ndarray, num_heads: int,
+                return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d] (sequential scan + gated FFN)."""
+    B, S, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(carry, xt):
+        carry = _slstm_cell(p, xt, carry, num_heads)
+        return carry, carry[0]
+
+    z = jnp.zeros((B, d), jnp.float32)
+    init = (z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+    (hf, cf, nf, mf), hs = jax.lax.scan(step, init, xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    # gated FFN (proj factor 4/3), part of the sLSTM block
+    f = jax.nn.gelu(h @ p["fwg"]) * (h @ p["fwi"])
+    out = f @ p["fwo"]
+    if return_state:
+        return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+    return out
+
+
+def slstm_init_cache(p: dict, batch: int) -> dict:
+    d = p["W"].shape[0]
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: dict, x1: jnp.ndarray, cache: dict, num_heads: int
+                 ) -> tuple[jnp.ndarray, dict]:
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    carry = _slstm_cell(p, x1[:, 0].astype(jnp.float32), carry, num_heads)
+    h = carry[0][:, None].astype(x1.dtype)
+    f = jax.nn.gelu(h @ p["fwg"]) * (h @ p["fwi"])
+    return f @ p["fwo"], {"h": carry[0], "c": carry[1], "n": carry[2],
+                          "m": carry[3]}

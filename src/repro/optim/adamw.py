@@ -1,0 +1,58 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer moments are fp32 pytrees shaped like the parameters; under pjit
+they co-shard with the parameters (ZeRO-1-style: the sharding rules place
+them on (model, data), so no device holds a full moment tensor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, state, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu2 = b1 * mu + (1 - b1) * g32
+        nu2 = b2 * nu + (1 - b2) * jnp.square(g32)
+        upd_ = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (upd_ + decay
+                                           * p.astype(jnp.float32))
+        return p2.astype(p.dtype), mu2, nu2
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    mu_leaves = jax.tree.leaves(state["mu"])
+    nu_leaves = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, mu, nu) for p, g, mu, nu in
+           zip(p_leaves, g_leaves, mu_leaves, nu_leaves)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm

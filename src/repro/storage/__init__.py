@@ -1,0 +1,10 @@
+from repro.storage.csr import CSRGraph, from_edges, symmetrize
+from repro.storage.rmat import rmat_graph
+from repro.storage.partition import partition_lplf, partition_bf, PartitionResult
+from repro.storage.hybrid import build_hybrid, HybridGraph
+
+__all__ = [
+    "CSRGraph", "from_edges", "symmetrize", "rmat_graph",
+    "partition_lplf", "partition_bf", "PartitionResult",
+    "build_hybrid", "HybridGraph",
+]

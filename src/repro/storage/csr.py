@@ -1,0 +1,86 @@
+"""Compressed Sparse Row graph container (host/numpy, preprocessing tier).
+
+This is the *input* format to the hybrid storage builder (Sec. 5 of the
+paper). Offsets use 8-byte unsigned integers and edges 4-byte integers,
+matching the paper's dataset accounting (Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Directed graph in CSR form.
+
+    indptr:  int64[num_vertices + 1]
+    indices: int32[num_edges]       (destination vertex ids)
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def size_bytes(self) -> int:
+        """CSR storage size (8-byte offsets + 4-byte edges), as in Table 1."""
+        return 8 * int(self.indptr.shape[0]) + 4 * self.num_edges
+
+    def validate(self) -> None:
+        assert self.indptr.dtype == np.int64
+        assert self.indices.dtype == np.int32
+        assert self.indptr[0] == 0
+        assert self.indptr[-1] == self.num_edges
+        assert np.all(np.diff(self.indptr) >= 0)
+        if self.num_edges:
+            assert self.indices.min() >= 0
+            assert self.indices.max() < self.num_vertices
+
+
+def from_edges(num_vertices: int, src: np.ndarray, dst: np.ndarray,
+               dedup: bool = True, sort_neighbors: bool = True) -> CSRGraph:
+    """Build a CSR graph from an edge list (drops self-loops, dedups)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst  # drop self-loops (standard GPS preprocessing)
+    src, dst = src[keep], dst[keep]
+    if dedup and src.size:
+        key = src * np.int64(num_vertices) + dst
+        _, uniq = np.unique(key, return_index=True)
+        src, dst = src[uniq], dst[uniq]
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    if sort_neighbors and src.size:
+        # secondary sort by dst inside each src run for deterministic layout
+        order2 = np.lexsort((dst, src))
+        src, dst = src[order2], dst[order2]
+    counts = np.bincount(src, minlength=num_vertices).astype(np.int64)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRGraph(indptr=indptr, indices=dst.astype(np.int32))
+
+
+def symmetrize(g: CSRGraph) -> CSRGraph:
+    """Replace each edge with two directed ones (undirected semantics).
+
+    Used for WCC / k-core inputs, as in the paper's preprocessing.
+    """
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64), np.diff(g.indptr))
+    dst = g.indices.astype(np.int64)
+    all_src = np.concatenate([src, dst])
+    all_dst = np.concatenate([dst, src])
+    return from_edges(g.num_vertices, all_src, all_dst, dedup=True)

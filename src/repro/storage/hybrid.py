@@ -1,0 +1,271 @@
+"""Hybrid graph storage architecture (paper Sec. 5).
+
+Key ideas reproduced faithfully:
+
+* Edges are partitioned into 4 KB blocks (Sec. 5.1, LPLF by default).
+* **Degree field elimination** (Sec. 5.2): *virtual vertices* are inserted
+  at fragmentation boundaries; large + virtual vertices are reordered by
+  offset so the CSR invariant ``deg(v'_i) = offset(v'_{i+1}) - offset(v'_i)``
+  is restored and no per-vertex degree needs to be stored. Virtual vertices
+  are tagged via the offset's highest bit (``is_virtual``).
+* **Mini edge list optimization** (Sec. 5.2): vertices with
+  ``deg <= delta_deg`` keep their adjacency lists in memory (``mini_data``),
+  sorted by descending degree and identified *without any per-vertex
+  metadata* through the ``theta_id`` array (Eqn. 3):
+
+      theta_id[deg] = min{ i : deg(v'_i) <= deg }
+
+  with closed-form degree and offset reconstruction (validated against the
+  paper's Example 5.1 in the tests).
+* A ``v2id`` table records the original->reordered mapping; it is only used
+  at program initialization/termination (kept off the memory budget, as in
+  the paper). ACGraph operates on the reordered graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.storage.csr import CSRGraph
+from repro.storage.partition import (BLOCK_EDGES, PartitionResult,
+                                     partition_bf, partition_lplf)
+
+VIRT_BIT = np.uint64(1) << np.uint64(63)
+
+
+@dataclasses.dataclass
+class HybridGraph:
+    """The reordered hybrid-format graph.
+
+    Reordered id space: ``[0, num_entities)`` are large + virtual vertices in
+    offset order; ``[num_entities, num_total)`` are mini vertices in
+    descending-degree order. Virtual ids never appear as edge destinations
+    and are never activated.
+    """
+
+    # ---- semi-external "in memory" tier -------------------------------
+    offsets_tagged: np.ndarray   # uint64[num_entities + 1]; bit63 = virtual
+    theta_id: np.ndarray         # int64[delta_deg + 1]
+    mini_data: np.ndarray        # int32[total mini edges] (new-id dsts)
+    # ---- "on SSD" tier --------------------------------------------------
+    edge_data: np.ndarray        # int32[num_blocks * block_edges]; -1 = pad
+    v2id: np.ndarray             # int64[orig_num_vertices] -> new id
+    # ---- derived metadata ----------------------------------------------
+    id2v: np.ndarray             # int64[num_total] -> orig id (-1 = virtual)
+    block_first_ent: np.ndarray  # int64[num_blocks + 1] entity-id range/block
+    block_span: np.ndarray       # int32[num_blocks] (giant head span, else 1)
+    is_tail: np.ndarray          # bool[num_blocks]
+    num_entities: int
+    num_mini: int
+    num_blocks: int
+    block_edges: int
+    delta_deg: int
+    orig_num_vertices: int
+    orig_num_edges: int
+
+    # ------------------------------------------------------------------
+    @property
+    def num_total(self) -> int:
+        return self.num_entities + self.num_mini
+
+    @property
+    def mini_start(self) -> int:
+        return self.num_entities
+
+    def offsets_untagged(self) -> np.ndarray:
+        return (self.offsets_tagged & ~VIRT_BIT).astype(np.int64)
+
+    def is_virtual(self, i) -> np.ndarray:
+        """Virtual-vertex test via the offset high bit (paper Sec. 5.2)."""
+        i = np.asarray(i)
+        ent = i < self.num_entities
+        tag = (self.offsets_tagged[np.minimum(i, self.num_entities - 1)]
+               & VIRT_BIT) != 0
+        return ent & tag
+
+    # ---- degree / offset reconstruction (no stored degree field) ------
+    def degree_of(self, i) -> np.ndarray:
+        """deg(v'_i), computed — never stored (paper Sec. 5.2)."""
+        i = np.asarray(i, dtype=np.int64)
+        off = self.offsets_untagged()
+        large_deg = off[np.minimum(i + 1, self.num_entities)] - \
+            off[np.minimum(i, self.num_entities - 1)]
+        mini_deg = mini_degree(i, self.theta_id)
+        return np.where(i < self.num_entities, large_deg, mini_deg)
+
+    def start_of(self, i) -> np.ndarray:
+        """Edge-array start: into edge_data (large) / mini_data (mini)."""
+        i = np.asarray(i, dtype=np.int64)
+        off = self.offsets_untagged()
+        large_start = off[np.minimum(i, self.num_entities - 1)]
+        mini_off = mini_offset(i, self.theta_id)
+        return np.where(i < self.num_entities, large_start, mini_off)
+
+    def neighbors_new(self, i: int) -> np.ndarray:
+        """Adjacency list of reordered vertex i (host-side test helper)."""
+        d = int(self.degree_of(i))
+        s = int(self.start_of(i))
+        if i < self.num_entities:
+            return self.edge_data[s:s + d]
+        return self.mini_data[s:s + d]
+
+    # ---- accounting ----------------------------------------------------
+    def index_memory_bytes(self) -> int:
+        """In-memory index cost: tagged offsets + theta + mini edge lists."""
+        return (8 * (self.num_entities + 1)
+                + 8 * (self.delta_deg + 1)
+                + 4 * int(self.mini_data.shape[0]))
+
+    def naive_index_memory_bytes(self) -> int:
+        """12-byte per-vertex (8B offset + 4B degree) baseline (Sec. 5)."""
+        return 12 * self.orig_num_vertices
+
+    def disk_bytes(self) -> int:
+        return 4 * int(self.edge_data.shape[0])
+
+
+# ----------------------------------------------------------------------
+# Closed-form mini-vertex degree / offset (paper Sec. 5.2 + Example 5.1).
+# ----------------------------------------------------------------------
+
+def mini_degree(i, theta_id) -> np.ndarray:
+    """deg(v'_i) = the unique d with theta[d] <= i < theta[d-1].
+
+    theta_id is non-decreasing as deg decreases (theta[delta] = mini_start),
+    so the degree equals the number of d values with theta[d] > i.
+    """
+    i = np.asarray(i, dtype=np.int64)
+    theta = np.asarray(theta_id, dtype=np.int64)
+    out = (theta[None, :] > i.reshape(-1, 1)).sum(axis=-1).astype(np.int64)
+    return out.reshape(i.shape)
+
+
+def mini_offset(i, theta_id) -> np.ndarray:
+    """Offset into mini_data per the paper's closed form:
+
+    offset(v'_i) = (i - theta[d]) * d + sum_{j=d+1}^{delta} (theta[j-1]-theta[j]) * j
+    """
+    i = np.asarray(i, dtype=np.int64)
+    theta = np.asarray(theta_id, dtype=np.int64)
+    delta = theta.shape[0] - 1
+    d = np.asarray(mini_degree(i, theta))
+    # base[d] = sum_{j=d+1}^{delta} (theta[j-1] - theta[j]) * j
+    js = np.arange(1, delta + 1, dtype=np.int64)
+    contrib = (theta[js - 1] - theta[js]) * js          # count(deg=j) * j
+    suffix = np.concatenate([np.cumsum(contrib[::-1])[::-1],
+                             np.zeros(1, dtype=np.int64)])  # suffix[d] over j>d
+    return (i - theta[np.minimum(d, delta)]) * d + suffix[np.minimum(d, delta)]
+
+
+# ----------------------------------------------------------------------
+# Builder
+# ----------------------------------------------------------------------
+
+def _concat_adjacency(g: CSRGraph, ids: np.ndarray) -> np.ndarray:
+    """Concatenate adjacency lists of ``ids`` (in that order), vectorized."""
+    starts = g.indptr[ids]
+    reps = (g.indptr[ids + 1] - starts).astype(np.int64)
+    total = int(reps.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    pos = np.repeat(starts, reps) + (np.arange(total, dtype=np.int64)
+                                     - np.repeat(np.cumsum(reps) - reps, reps))
+    return g.indices[pos].astype(np.int64)
+
+
+def build_hybrid(g: CSRGraph, delta_deg: int = 2, partitioner: str = "lplf",
+                 window: int = 8, block_edges: int = BLOCK_EDGES
+                 ) -> HybridGraph:
+    """Build the hybrid storage format from a CSR graph."""
+    deg = g.degrees()
+    n = g.num_vertices
+    large_mask = deg > delta_deg
+    large_ids = np.where(large_mask)[0].astype(np.int64)
+    mini_ids = np.where(~large_mask)[0].astype(np.int64)
+
+    # ---- partition large adjacency lists into blocks -------------------
+    if partitioner == "lplf":
+        part = partition_lplf(deg[large_ids], large_ids,
+                              block_edges=block_edges, window=window)
+    elif partitioner == "bf":
+        part = partition_bf(deg[large_ids], large_ids, block_edges=block_edges)
+    else:
+        raise ValueError(f"unknown partitioner: {partitioner}")
+    goff = part.global_offsets()
+    num_blocks = max(part.num_blocks, 1)
+
+    # ---- virtual vertices at fragmentation boundaries ------------------
+    fills = part.block_fill if part.num_blocks else np.zeros(1, dtype=np.int32)
+    frag_blocks = np.where(fills < block_edges)[0].astype(np.int64)
+    frag_blocks = frag_blocks[fills[frag_blocks] > 0] \
+        if part.num_blocks else frag_blocks[:0]
+    virt_offsets = frag_blocks * np.int64(block_edges) + fills[frag_blocks]
+
+    ent_offsets = np.concatenate([goff, virt_offsets])
+    ent_virtual = np.concatenate([np.zeros(goff.shape[0], dtype=bool),
+                                  np.ones(virt_offsets.shape[0], dtype=bool)])
+    ent_orig = np.concatenate([large_ids,
+                               np.full(virt_offsets.shape[0], -1, np.int64)])
+    order = np.argsort(ent_offsets, kind="stable")
+    ent_offsets = ent_offsets[order]
+    ent_virtual = ent_virtual[order]
+    ent_orig = ent_orig[order]
+    num_entities = int(ent_offsets.shape[0])
+
+    offsets_tagged = np.zeros(num_entities + 1, dtype=np.uint64)
+    offsets_tagged[:num_entities] = ent_offsets.astype(np.uint64)
+    offsets_tagged[:num_entities][ent_virtual] |= VIRT_BIT
+    offsets_tagged[num_entities] = np.uint64(num_blocks * block_edges)
+
+    # ---- mini ordering + theta_id (Eqn. 3) ------------------------------
+    mini_deg_arr = deg[mini_ids]
+    mini_order = np.lexsort((mini_ids, -mini_deg_arr))  # deg desc, id asc
+    mini_sorted = mini_ids[mini_order]
+    mini_degs_sorted = mini_deg_arr[mini_order]
+    num_mini = int(mini_sorted.shape[0])
+    theta_id = np.zeros(delta_deg + 1, dtype=np.int64)
+    for d in range(delta_deg + 1):
+        # first index (in sorted minis) whose degree <= d
+        theta_id[d] = num_entities + np.searchsorted(-mini_degs_sorted, -d,
+                                                     side="left")
+
+    # ---- id maps --------------------------------------------------------
+    v2id = np.full(n, -1, dtype=np.int64)
+    real_ent = ~ent_virtual
+    v2id[ent_orig[real_ent]] = np.where(real_ent)[0]
+    v2id[mini_sorted] = num_entities + np.arange(num_mini, dtype=np.int64)
+    id2v = np.full(num_entities + num_mini, -1, dtype=np.int64)
+    id2v[:num_entities][real_ent] = ent_orig[real_ent]
+    id2v[num_entities:] = mini_sorted
+
+    # ---- edge payloads (destinations translated to new ids) ------------
+    edge_data = np.full(num_blocks * block_edges, -1, dtype=np.int32)
+    if large_ids.shape[0]:
+        adj = _concat_adjacency(g, large_ids)  # large-id-ascending order
+        reps = deg[large_ids]
+        pos = np.repeat(goff, reps) + (
+            np.arange(adj.shape[0], dtype=np.int64)
+            - np.repeat(np.cumsum(reps) - reps, reps))
+        edge_data[pos] = v2id[adj].astype(np.int32)
+    mini_adj = _concat_adjacency(g, mini_sorted) if num_mini else \
+        np.zeros(0, dtype=np.int64)
+    mini_data = v2id[mini_adj].astype(np.int32) if mini_adj.shape[0] else \
+        np.zeros(0, dtype=np.int32)
+
+    # ---- per-block entity ranges ---------------------------------------
+    bounds = np.arange(num_blocks + 1, dtype=np.int64) * block_edges
+    block_first_ent = np.searchsorted(ent_offsets, bounds, side="left")
+
+    block_span = part.block_span if part.num_blocks else \
+        np.ones(1, dtype=np.int32)
+    is_tail = part.is_tail if part.num_blocks else np.zeros(1, dtype=bool)
+
+    return HybridGraph(
+        offsets_tagged=offsets_tagged, theta_id=theta_id,
+        mini_data=mini_data, edge_data=edge_data, v2id=v2id, id2v=id2v,
+        block_first_ent=block_first_ent.astype(np.int64),
+        block_span=block_span, is_tail=is_tail,
+        num_entities=num_entities, num_mini=num_mini, num_blocks=num_blocks,
+        block_edges=block_edges, delta_deg=delta_deg,
+        orig_num_vertices=n, orig_num_edges=g.num_edges)

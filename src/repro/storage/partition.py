@@ -1,0 +1,173 @@
+"""Graph partitioning into 4 KB edge blocks (paper Sec. 5.1).
+
+Two strategies:
+  * ``partition_lplf`` — the paper's default locality-preserving last-fit
+    (LPLF): vertices are visited in original id order (preserving inherent
+    locality); each adjacency list is placed into the *rightmost* block of a
+    sliding window of recently-opened blocks that can accommodate it, else a
+    new block is opened and the window shifts.
+  * ``partition_bf`` — the Table-2 baseline: degree-sorted best-fit packing
+    (tightest available block first).
+
+Adjacency lists with more than ``block_edges`` edges ("giant" vertices) span
+*consecutive, exclusive* blocks (see DESIGN.md Sec. 8 for the exclusivity
+deviation note). Lists that fit in one block never straddle a boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+BLOCK_BYTES = 4096
+EDGE_BYTES = 4
+BLOCK_EDGES = BLOCK_BYTES // EDGE_BYTES  # 1024 edges per 4 KB disk block
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    """Placement of large-vertex adjacency lists into blocks.
+
+    vertex_ids:      int64[n] original ids of partitioned (large) vertices
+    block_of:        int64[n] head block per vertex
+    offset_in_block: int32[n]
+    num_blocks:      total blocks allocated
+    block_fill:      int32[num_blocks] edges stored per block
+    block_span:      int32[num_blocks] span length at giant heads, else 1
+    is_tail:         bool[num_blocks] true for giant-span tail blocks
+    block_edges:     capacity per block
+    """
+
+    vertex_ids: np.ndarray
+    block_of: np.ndarray
+    offset_in_block: np.ndarray
+    num_blocks: int
+    block_fill: np.ndarray
+    block_span: np.ndarray
+    is_tail: np.ndarray
+    block_edges: int
+
+    def global_offsets(self) -> np.ndarray:
+        """Edge index of each vertex in the block-major edge array."""
+        return self.block_of * np.int64(self.block_edges) + self.offset_in_block
+
+    def fragmentation(self) -> float:
+        """Fraction of allocated block space left unused."""
+        total = self.num_blocks * self.block_edges
+        used = int(self.block_fill.sum())
+        return 1.0 - used / max(total, 1)
+
+
+def _finish(vertex_ids, block_of, offset_in_block, fills, spans, tails,
+            block_edges) -> PartitionResult:
+    num_blocks = len(fills)
+    return PartitionResult(
+        vertex_ids=np.asarray(vertex_ids, dtype=np.int64),
+        block_of=np.asarray(block_of, dtype=np.int64),
+        offset_in_block=np.asarray(offset_in_block, dtype=np.int32),
+        num_blocks=num_blocks,
+        block_fill=np.asarray(fills, dtype=np.int32),
+        block_span=np.asarray(spans, dtype=np.int32),
+        is_tail=np.asarray(tails, dtype=bool),
+        block_edges=block_edges,
+    )
+
+
+def _place_giant(deg, fills, spans, tails, block_edges):
+    """Allocate ceil(deg/block_edges) fresh consecutive blocks for a giant."""
+    span = -(-deg // block_edges)
+    head = len(fills)
+    for s in range(span):
+        fill = block_edges if s < span - 1 else deg - block_edges * (span - 1)
+        fills.append(fill)
+        spans.append(span if s == 0 else 1)
+        tails.append(s > 0)
+    return head
+
+
+def partition_lplf(degrees: np.ndarray, vertex_ids: np.ndarray | None = None,
+                   block_edges: int = BLOCK_EDGES, window: int = 8
+                   ) -> PartitionResult:
+    """Locality-preserving last-fit (the paper's default, window=8)."""
+    degrees = np.asarray(degrees, dtype=np.int64)
+    if vertex_ids is None:
+        vertex_ids = np.arange(degrees.shape[0], dtype=np.int64)
+    fills: list[int] = []
+    spans: list[int] = []
+    tails: list[bool] = []
+    win: list[int] = []  # sliding window of candidate block ids (oldest first)
+    block_of = np.zeros(degrees.shape[0], dtype=np.int64)
+    offset_in_block = np.zeros(degrees.shape[0], dtype=np.int32)
+    for i, deg in enumerate(degrees):
+        deg = int(deg)
+        if deg > block_edges:  # giant: exclusive consecutive span
+            head = _place_giant(deg, fills, spans, tails, block_edges)
+            block_of[i] = head
+            offset_in_block[i] = 0
+            continue
+        # last-fit: rightmost (most recently opened) window block that fits
+        placed = -1
+        for b in reversed(win):
+            if fills[b] + deg <= block_edges:
+                placed = b
+                break
+        if placed < 0:
+            placed = len(fills)
+            fills.append(0)
+            spans.append(1)
+            tails.append(False)
+            win.append(placed)
+            if len(win) > window:
+                win.pop(0)
+        block_of[i] = placed
+        offset_in_block[i] = fills[placed]
+        fills[placed] += deg
+    return _finish(vertex_ids, block_of, offset_in_block, fills, spans, tails,
+                   block_edges)
+
+
+def partition_bf(degrees: np.ndarray, vertex_ids: np.ndarray | None = None,
+                 block_edges: int = BLOCK_EDGES) -> PartitionResult:
+    """Degree-sorted best-fit packing (Table 2 baseline).
+
+    Vertices are processed in descending degree order; each is assigned to
+    the open block with the *tightest* fit. Implemented with residual-space
+    buckets (residual is bounded by block_edges, so best-fit is an upward
+    bucket scan).
+    """
+    degrees = np.asarray(degrees, dtype=np.int64)
+    if vertex_ids is None:
+        vertex_ids = np.arange(degrees.shape[0], dtype=np.int64)
+    order = np.argsort(-degrees, kind="stable")
+    fills: list[int] = []
+    spans: list[int] = []
+    tails: list[bool] = []
+    # buckets[r] = stack of block ids with exactly r residual edge slots
+    buckets: list[list[int]] = [[] for _ in range(block_edges + 1)]
+    block_of = np.zeros(degrees.shape[0], dtype=np.int64)
+    offset_in_block = np.zeros(degrees.shape[0], dtype=np.int32)
+    for i in order:
+        deg = int(degrees[i])
+        if deg > block_edges:
+            head = _place_giant(deg, fills, spans, tails, block_edges)
+            block_of[i] = head
+            offset_in_block[i] = 0
+            continue
+        placed = -1
+        for r in range(deg, block_edges + 1):  # tightest fit first
+            if buckets[r]:
+                placed = buckets[r].pop()
+                buckets[r - deg].append(placed)
+                break
+        if placed < 0:
+            placed = len(fills)
+            fills.append(0)
+            spans.append(1)
+            tails.append(False)
+            buckets[block_edges - deg].append(placed)
+        block_of[i] = placed
+        offset_in_block[i] = fills[placed]
+        fills[placed] += deg
+    # reorder result arrays back to input order (they already are: indexed by i)
+    return _finish(vertex_ids, block_of, offset_in_block, fills, spans, tails,
+                   block_edges)

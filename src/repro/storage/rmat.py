@@ -1,0 +1,47 @@
+"""R-MAT synthetic graph generator (Chakrabarti et al., SDM'04).
+
+Used by the skewness-sensitivity benchmark (paper Fig. 17) and the test
+suite. Parameters (a, b, c, d) control degree skew; the paper varies them to
+obtain degree std-devs from 30 to 500 at fixed |V|, |E|.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.storage.csr import CSRGraph, from_edges
+
+
+def rmat_edges(scale: int, num_edges: int, a: float = 0.57, b: float = 0.19,
+               c: float = 0.19, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Generate an R-MAT edge list with 2**scale vertices (vectorized)."""
+    rng = np.random.default_rng(seed)
+    d = 1.0 - a - b - c
+    assert d >= -1e-9, "R-MAT probabilities must sum to <= 1"
+    src = np.zeros(num_edges, dtype=np.int64)
+    dst = np.zeros(num_edges, dtype=np.int64)
+    for level in range(scale):
+        r = rng.random(num_edges)
+        # quadrant choice: [a | b / c | d]
+        right = (r >= a) & (r < a + b) | (r >= a + b + c)
+        down = r >= a + b
+        src = src * 2 + down.astype(np.int64)
+        dst = dst * 2 + right.astype(np.int64)
+    return src, dst
+
+
+def rmat_graph(scale: int, avg_degree: int = 16, a: float = 0.57,
+               b: float = 0.19, c: float = 0.19, seed: int = 0,
+               symmetric: bool = False) -> CSRGraph:
+    n = 1 << scale
+    src, dst = rmat_edges(scale, n * avg_degree, a=a, b=b, c=c, seed=seed)
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    return from_edges(n, src, dst)
+
+
+def uniform_graph(num_vertices: int, num_edges: int, seed: int = 0) -> CSRGraph:
+    """Erdos-Renyi-ish uniform random digraph (low skew baseline)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_vertices, size=num_edges)
+    dst = rng.integers(0, num_vertices, size=num_edges)
+    return from_edges(num_vertices, src, dst)

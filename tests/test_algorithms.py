@@ -1,0 +1,139 @@
+"""Integration tests: the five paper algorithms on the async engine vs
+pure-python oracles, in both async and sync (Sec. 4.3) modes."""
+import numpy as np
+import pytest
+
+from repro.algorithms import (run_bfs, run_kcore, run_mis, run_pagerank,
+                              run_ppr, run_wcc)
+from repro.core.engine import Engine, EngineConfig
+from repro.storage.csr import symmetrize
+from repro.storage.hybrid import build_hybrid
+
+from conftest import (check_is_mis, oracle_bfs, oracle_kcore, oracle_ppr,
+                      oracle_wcc, small_graph)
+
+
+def make_engine(g, sync=False, **kw):
+    hg = build_hybrid(g, delta_deg=2, block_edges=kw.pop("block_edges", 64))
+    cfg = EngineConfig(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
+                       chunk_size=64, sync=sync, **kw)
+    return Engine(hg, cfg), hg
+
+
+@pytest.mark.parametrize("sync", [False, True])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bfs_matches_oracle(sync, seed):
+    g = small_graph(n=250, m=1500, seed=seed)
+    eng, hg = make_engine(g, sync=sync)
+    src = 3
+    dis, metrics = run_bfs(eng, hg, src)
+    want = oracle_bfs(g, src)
+    assert np.array_equal(dis.astype(np.int64), want)
+    assert metrics.ticks > 0
+    assert metrics.vertices_processed > 0
+
+
+def test_bfs_unreachable():
+    # two disconnected stars
+    g = small_graph(n=40, m=120, seed=7)
+    eng, hg = make_engine(g)
+    dis, _ = run_bfs(eng, hg, 0)
+    want = oracle_bfs(g, 0)
+    assert np.array_equal(dis.astype(np.int64), want)
+
+
+@pytest.mark.parametrize("sync", [False, True])
+def test_wcc_matches_oracle(sync):
+    g = small_graph(n=300, m=900, seed=2, symmetric=True)
+    eng, hg = make_engine(g, sync=sync)
+    labels, metrics = run_wcc(eng, hg)
+    want = oracle_wcc(g)
+    assert np.array_equal(labels, want)
+    assert metrics.edges_scanned > 0
+
+
+@pytest.mark.parametrize("k", [3, 5])
+def test_kcore_matches_oracle(k):
+    g = small_graph(n=250, m=2500, seed=3, symmetric=True)
+    eng, hg = make_engine(g)
+    in_core, _ = run_kcore(eng, hg, k)
+    want = oracle_kcore(g, k)
+    assert np.array_equal(in_core, want)
+
+
+def test_ppr_matches_oracle():
+    g = small_graph(n=200, m=1600, seed=4)
+    eng, hg = make_engine(g)
+    alpha, r_max = 0.15, 1e-4
+    p, _ = run_ppr(eng, hg, source=5, alpha=alpha, r_max=r_max)
+    r0 = np.zeros(g.num_vertices)
+    r0[5] = 1.0
+    p_want, r_want = oracle_ppr(g, r0, alpha, r_max)
+    # both are valid forward-push fixpoints; estimates agree within the
+    # total residual bound
+    assert np.all(p >= -1e-7)
+    np.testing.assert_allclose(p.sum(), p_want.sum(), atol=r_max * 200 * 10)
+    np.testing.assert_allclose(p, p_want, atol=5e-3)
+
+
+def test_pagerank_converges():
+    g = small_graph(n=150, m=1200, seed=5)
+    eng, hg = make_engine(g)
+    p, metrics = run_pagerank(eng, hg, r_max=1e-5)
+    assert p.sum() <= 1.0 + 1e-5
+    assert p.sum() > 0.3  # most mass converted
+    assert metrics.ticks > 0
+
+
+def test_mis_valid():
+    g = small_graph(n=200, m=800, seed=6, symmetric=True)
+    eng, hg = make_engine(g)
+    mis, metrics = run_mis(eng, hg, seed=0)
+    check_is_mis(g, mis)
+    assert metrics.barriers == 0  # phases barrier at the host level
+
+
+def test_async_engine_reuse_reduces_io():
+    """The online worklist must reuse resident blocks (paper Sec. 4.2):
+    async I/O volume <= sync I/O volume on the same WCC workload."""
+    g = small_graph(n=400, m=2400, seed=8, symmetric=True)
+    eng_async, hg = make_engine(g, sync=False)
+    eng_sync, hg2 = make_engine(g, sync=True)
+    _, m_async = run_wcc(eng_async, hg)
+    _, m_sync = run_wcc(eng_sync, hg2)
+    assert m_async.io_blocks <= m_sync.io_blocks
+    assert m_sync.barriers > 0
+
+
+def test_kcore_zero_io_for_mini_only_graph():
+    """A graph with only mini vertices (deg <= 2) lives in memory: the
+    hybrid storage must serve it without any disk I/O (paper Sec. 5.2)."""
+    # ring graph: every vertex has degree 2 (symmetric)
+    n = 64
+    src = np.arange(n)
+    dst = (src + 1) % n
+    from repro.storage.csr import from_edges
+    g = symmetrize(from_edges(n, src, dst))
+    eng, hg = make_engine(g)
+    assert hg.num_blocks == 1  # no large vertices -> single empty block
+    in_core, metrics = run_kcore(eng, hg, k=2)
+    assert in_core.all()
+    assert metrics.io_blocks == 0
+
+
+def test_early_stop_engine_runs():
+    g = small_graph(n=200, m=1000, seed=9)
+    hg = build_hybrid(g, block_edges=64)
+    eng = Engine(hg, EngineConfig(early_stop=2, pool_slots=16,
+                                  chunk_size=64))
+    dis, _ = run_bfs(eng, hg, 0)
+    assert np.array_equal(dis.astype(np.int64), oracle_bfs(g, 0))
+
+
+def test_priority_cached_policy():
+    g = small_graph(n=200, m=1000, seed=10)
+    hg = build_hybrid(g, block_edges=64)
+    eng = Engine(hg, EngineConfig(cached_policy="priority", pool_slots=16,
+                                  chunk_size=64))
+    dis, _ = run_bfs(eng, hg, 0)
+    assert np.array_equal(dis.astype(np.int64), oracle_bfs(g, 0))

@@ -1,0 +1,89 @@
+"""Tests for benchmark-harness components: the Fig. 2 cache-policy
+simulator (OPT/SUB/LRU) and the SSD model."""
+import numpy as np
+import pytest
+
+from benchmarks.bench_cache_policies import simulate
+from repro.core.engine import Metrics
+from repro.io_sim.ssd_model import SSDModel
+
+
+def _metrics(**kw):
+    base = dict(io_ops=10, io_blocks=100, edges_scanned=1000,
+                vertices_processed=50, reuse_activations=5,
+                blocks_reused=2, exec_idle_ticks=0, io_active_ticks=8,
+                barriers=0, ticks=10)
+    base.update(kw)
+    return Metrics(**base)
+
+
+# ----------------------------------------------------------------------
+# cache-policy simulator (Belady OPT / SUB / LRU)
+# ----------------------------------------------------------------------
+
+def test_opt_is_optimal_on_simple_trace():
+    # classic Belady example: trace with capacity 2
+    trace = [[1, 2, 3, 1, 2, 3]]
+    loads_opt = simulate(trace, capacity=2, policy="opt")
+    loads_lru = simulate(trace, capacity=2, policy="lru")
+    assert loads_opt <= loads_lru
+
+
+def test_all_policies_lower_bound_cold_misses():
+    trace = [[1, 2, 3], [4, 5], [1, 2]]
+    uniq = 5
+    for pol in ("opt", "sub", "lru"):
+        loads = simulate(trace, capacity=10, policy=pol)
+        assert loads == uniq  # infinite-ish cache: only cold misses
+
+
+def test_policy_ordering_random_traces():
+    """OPT <= LRU on arbitrary traces (Belady optimality)."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        trace = [rng.integers(0, 12, size=rng.integers(1, 8)).tolist()
+                 for _ in range(6)]
+        cap = int(rng.integers(2, 6))
+        l_opt = simulate(trace, cap, "opt")
+        l_lru = simulate(trace, cap, "lru")
+        l_sub = simulate(trace, cap, "sub")
+        assert l_opt <= l_lru
+        assert l_opt <= l_sub
+
+
+def test_capacity_monotone():
+    rng = np.random.default_rng(1)
+    trace = [rng.integers(0, 10, size=5).tolist() for _ in range(8)]
+    prev = None
+    for cap in (2, 4, 8, 16):
+        loads = simulate(trace, cap, "opt")
+        if prev is not None:
+            assert loads <= prev
+        prev = loads
+
+
+# ----------------------------------------------------------------------
+# SSD model
+# ----------------------------------------------------------------------
+
+def test_ssd_model_pipelining():
+    m = SSDModel(bandwidth_gbps=6.0, edges_per_sec_per_lane=1e8, lanes=4)
+    io_bound = _metrics(io_blocks=100000, edges_scanned=10)
+    cpu_bound = _metrics(io_blocks=1, edges_scanned=10 ** 9)
+    assert m.modeled_runtime(io_bound) >= m.io_seconds(io_bound)
+    assert m.modeled_runtime(cpu_bound) >= m.compute_seconds(cpu_bound)
+    # pipelined: total <= sum of both + stalls
+    for mm in (io_bound, cpu_bound):
+        assert m.modeled_runtime(mm) <= (m.io_seconds(mm)
+                                         + m.compute_seconds(mm) + 1e-9)
+
+
+def test_ssd_model_occupancy():
+    m = SSDModel()
+    assert m.occupancy(_metrics(io_active_ticks=8, ticks=10)) == \
+        pytest.approx(0.8)
+
+
+def test_bytes_per_edge():
+    mm = _metrics(io_blocks=10, edges_scanned=4096 * 10)
+    assert mm.bytes_per_edge() == pytest.approx(1.0)

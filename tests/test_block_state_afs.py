@@ -1,0 +1,125 @@
+"""Property tests for the block state machine (Fig. 4) and the adaptive
+frontier set (Fig. 6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.afs import (DENSE_BITS, SPARSE_CAPACITY,
+                            AdaptiveFrontierSet)
+from repro.core.block_state import (ACTIVE_STATES, RESIDENT_STATES,
+                                    TRANSITIONS, BlockState, Event,
+                                    transition)
+
+
+# ----------------------------------------------------------------------
+# block state machine
+# ----------------------------------------------------------------------
+
+def test_fig4_paths():
+    s = BlockState.INACTIVE
+    s = transition(s, Event.ACTIVATE)
+    assert s == BlockState.UNCACHED
+    s = transition(s, Event.ISSUE_IO)
+    s = transition(s, Event.IO_COMPLETE)
+    assert s == BlockState.CACHED
+    s = transition(s, Event.PULL)
+    assert s == BlockState.PROCESSING
+    # reactivation path: back to cached WITHOUT I/O
+    s = transition(s, Event.ACTIVATE)
+    assert s == BlockState.REACTIVATED
+    s = transition(s, Event.FINISH)
+    assert s == BlockState.CACHED
+    # exhaustion path: buffer released
+    s = transition(s, Event.PULL)
+    s = transition(s, Event.FINISH)
+    assert s == BlockState.INACTIVE
+
+
+def test_invalid_transitions_raise():
+    with pytest.raises(ValueError):
+        transition(BlockState.INACTIVE, Event.PULL)
+    with pytest.raises(ValueError):
+        transition(BlockState.UNCACHED, Event.FINISH)
+    with pytest.raises(ValueError):
+        transition(BlockState.INACTIVE, Event.IO_COMPLETE)
+
+
+@given(st.lists(st.sampled_from(list(Event)), max_size=60))
+def test_state_machine_invariants(events):
+    """Along any valid event path: I/O is only issued for active non-resident
+    blocks, and finishing always lands in INACTIVE or CACHED."""
+    s = BlockState.INACTIVE
+    for e in events:
+        if (s, e) not in TRANSITIONS:
+            continue
+        if e == Event.ISSUE_IO:
+            assert s in ACTIVE_STATES and s not in RESIDENT_STATES
+        s = transition(s, e)
+        if e == Event.FINISH:
+            assert s in (BlockState.INACTIVE, BlockState.CACHED)
+
+
+# ----------------------------------------------------------------------
+# adaptive frontier set
+# ----------------------------------------------------------------------
+
+def test_afs_layout_budget():
+    afs = AdaptiveFrontierSet(v_start=100)
+    assert afs.payload_nbytes() == 51  # 4B start + 2B count + 45B payload
+    assert SPARSE_CAPACITY == 11
+    assert DENSE_BITS == 360
+
+
+def test_afs_mode_transition_at_capacity():
+    afs = AdaptiveFrontierSet(v_start=0)
+    for v in range(SPARSE_CAPACITY):
+        assert afs.add(v)
+    assert not afs.dense
+    afs.add(SPARSE_CAPACITY)  # 12th member flips to bitmap
+    assert afs.dense
+    assert len(afs) == SPARSE_CAPACITY + 1
+    # shrinks back below the threshold
+    afs.discard(0)
+    assert not afs.dense
+    assert sorted(afs) == list(range(1, SPARSE_CAPACITY + 1))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=0,
+                                      max_value=DENSE_BITS - 1)),
+                max_size=80),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_afs_matches_python_set(ops, v_start):
+    afs = AdaptiveFrontierSet(v_start=v_start)
+    model: set[int] = set()
+    for add, off in ops:
+        v = v_start + off
+        if add:
+            assert afs.add(v) == (v not in model)
+            model.add(v)
+        else:
+            assert afs.discard(v) == (v in model)
+            model.discard(v)
+        assert len(afs) == len(model)
+        assert set(afs) == model
+        # dense exactly when count exceeds sparse capacity... (hysteresis:
+        # dense only required above capacity)
+        if len(model) > SPARSE_CAPACITY:
+            assert afs.dense
+
+
+def test_afs_out_of_range_rejected():
+    afs = AdaptiveFrontierSet(v_start=10)
+    with pytest.raises(ValueError):
+        afs.add(9)
+    with pytest.raises(ValueError):
+        afs.add(10 + DENSE_BITS)
+    assert 9 not in afs
+
+
+def test_afs_dense_capacity_covers_block():
+    """With delta_deg=2 a 4 KB block holds at most floor(1024/3)=341
+    vertices < 360 dense bits (the paper's capacity argument)."""
+    assert 1024 // 3 < DENSE_BITS

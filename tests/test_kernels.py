@@ -1,0 +1,133 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (flash_attention_tpu, frontier_relax,
+                               paged_decode_attention)
+from repro.kernels import ref
+
+
+# ----------------------------------------------------------------------
+# frontier relax
+# ----------------------------------------------------------------------
+
+def make_blocks(G, Vm, BE, seed=0):
+    rng = np.random.default_rng(seed)
+    starts = np.zeros((G, Vm), np.int32)
+    degs = np.zeros((G, Vm), np.int32)
+    for g in range(G):
+        off = 0
+        for v in range(Vm):
+            d = int(rng.integers(0, 6))
+            if off + d > BE:
+                d = 0
+            starts[g, v] = off
+            degs[g, v] = d
+            off += d
+    active = rng.integers(0, 2, (G, Vm)).astype(np.int32)
+    msgs = rng.normal(size=(G, Vm)).astype(np.float32)
+    edges = rng.integers(0, 1000, (G, BE)).astype(np.int32)
+    return (jnp.asarray(starts), jnp.asarray(degs), jnp.asarray(active),
+            jnp.asarray(msgs), jnp.asarray(edges))
+
+
+@pytest.mark.parametrize("G,Vm,BE", [(1, 8, 128), (3, 16, 128),
+                                     (2, 48, 256), (4, 344, 1024)])
+@pytest.mark.parametrize("op", ["identity", "plus_one"])
+def test_frontier_relax_matches_ref(G, Vm, BE, op):
+    args = make_blocks(G, Vm, BE, seed=G * 7 + Vm)
+    vals_k, valid_k = frontier_relax(*args, op=op, interpret=True)
+    vals_r, valid_r = ref.frontier_relax_ref(*args, op=op)
+    np.testing.assert_array_equal(np.asarray(valid_k), np.asarray(valid_r))
+    np.testing.assert_allclose(
+        np.asarray(vals_k)[np.asarray(valid_k)],
+        np.asarray(vals_r)[np.asarray(valid_r)], rtol=1e-6, atol=1e-6)
+
+
+def test_frontier_relax_engine_semantics():
+    """The kernel reproduces the engine's per-block edge expansion: only
+    active vertices' edge slots are valid, values = their message (+1)."""
+    starts = jnp.asarray([[0, 4, 10]], jnp.int32)
+    degs = jnp.asarray([[4, 6, 2]], jnp.int32)
+    active = jnp.asarray([[1, 0, 1]], jnp.int32)
+    msgs = jnp.asarray([[5.0, 7.0, 9.0]], jnp.float32)
+    edges = jnp.zeros((1, 16), jnp.int32)
+    vals, valid = frontier_relax(starts, degs, active, msgs, edges,
+                                 op="plus_one", interpret=True)
+    want_valid = [True] * 4 + [False] * 6 + [True] * 2 + [False] * 4
+    assert np.asarray(valid)[0].tolist() == want_valid
+    assert np.asarray(vals)[0, 0] == 6.0 and np.asarray(vals)[0, 10] == 10.0
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,K,hd", [(1, 128, 2, 1, 64),
+                                        (2, 256, 4, 2, 32),
+                                        (1, 384, 2, 2, 128)])
+def test_flash_attention_matches_ref(B, S, H, K, hd, dtype):
+    rng = np.random.default_rng(B * 3 + S)
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), dtype)
+    out = flash_attention_tpu(q, k, v, causal=True, interpret=True)
+    # fold for the ref oracle
+    G = H // K
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention_ref(fold(q), fold(kx), fold(vx), causal=True,
+                                   scale=float(1.0 / np.sqrt(hd)))
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_window():
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 256, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    out = flash_attention_tpu(q, k, v, causal=True, window=64,
+                              interpret=True)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention_ref(fold(q), fold(k), fold(v), causal=True,
+                                   window=64,
+                                   scale=float(1.0 / np.sqrt(hd)))
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# paged decode attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,hd,page,npg", [(2, 4, 64, 16, 4),
+                                             (1, 8, 128, 32, 8)])
+def test_paged_decode_matches_ref(B, H, hd, page, npg, dtype):
+    rng = np.random.default_rng(B + H)
+    n_phys = B * npg + 3
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(n_phys, page, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(n_phys, page, hd)), dtype)
+    # random non-contiguous page assignment (the ACGraph block table)
+    table = jnp.asarray(
+        rng.permutation(n_phys)[:B * npg].reshape(B, npg), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, npg * page, size=(B,)), jnp.int32)
+    out = paged_decode_attention(q, kp, vp, table, lens, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, table, lens,
+                                          scale=float(1.0 / np.sqrt(hd)))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

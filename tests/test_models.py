@@ -1,0 +1,204 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + numerics tests
+for the chunked attention/recurrence implementations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.transformer import Model
+
+
+def make_batch(cfg, B=2, S=64):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                    jnp.int32)}
+    if cfg.is_encdec:
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.num_patches > 0:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch):
+    """One forward/backward on a reduced same-family config: finite loss,
+    finite grads, correct shapes."""
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+
+    def loss_fn(p):
+        return m.loss(p, batch)
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    # loss should be near ln(vocab) at init
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.5, float(loss)
+    gnorms = [float(jnp.linalg.norm(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms), f"{arch}: non-finite grads"
+    assert any(g > 0 for g in gnorms), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_prefill_decode_consistency(arch):
+    """Prefill then one decode step must agree with a from-scratch forward
+    over the extended sequence (teacher-forcing equivalence)."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe_experts:
+        # discrete top-k routing can flip on ~1e-6 numeric differences
+        # between the chunked paths; make routing continuous so this test
+        # isolates CACHE correctness (train smoke covers sparse top-k).
+        import dataclasses as dc
+        cfg = dc.replace(cfg, moe_top_k=cfg.moe_experts)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S = 2, 32
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :S])}
+    if cfg.is_encdec:
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    if cfg.num_patches > 0:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)) * 0.02,
+            jnp.float32)
+    P = cfg.num_patches
+    cache_len = S + P + 8
+    logits_pre, caches = jax.jit(
+        lambda p, b: m.prefill(p, b, cache_len=cache_len))(params, batch)
+    assert logits_pre.shape == (B, cfg.vocab)
+    assert jnp.isfinite(logits_pre).all()
+
+    # one decode step at position S+P
+    pos = jnp.full((B,), S + P, jnp.int32)
+    logits_dec, caches2 = jax.jit(m.decode)(
+        params, jnp.asarray(toks[:, S:S + 1]), pos, caches)
+    assert logits_dec.shape == (B, cfg.vocab)
+    assert jnp.isfinite(logits_dec).all()
+
+    # oracle: full forward over S+1 tokens; compare last-position logits
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.asarray(toks[:, :S + 1])
+    logits_full, _ = jax.jit(
+        lambda p, b: m.prefill(p, b, cache_len=None))(params, batch2)
+    # MoE archs: capacity C depends on token count (S vs S+1), so routing
+    # drops can differ slightly between the two paths — widen tolerance.
+    tol = 6e-2 if cfg.moe_experts else 2e-2
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------------------
+# numerics: chunked vs reference implementations
+# ----------------------------------------------------------------------
+
+def test_flash_matches_direct():
+    rng = np.random.default_rng(0)
+    B, S, H, K, hd = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    for window in (0, 16):
+        out_f = attn_lib.flash_attention(q, k, v, causal=True,
+                                         window=window, q_chunk=32,
+                                         kv_chunk=32)
+        out_d = attn_lib._direct_attention(q, k, v, True, window)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_d),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_chunked_matches_sequential():
+    rng = np.random.default_rng(1)
+    p = ssm_lib.mamba_init(jax.random.PRNGKey(0), 32, expand=2, state=8,
+                           dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 40, 32)) * 0.5, jnp.float32)
+    out_c = ssm_lib.mamba_apply(p, x, chunk=8)
+    # sequential oracle via repeated decode steps
+    cache = ssm_lib.mamba_init_cache(p, 2, jnp.float32)
+    outs = []
+    for t in range(40):
+        o, cache = ssm_lib.mamba_decode(p, x[:, t:t + 1], cache)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_prefill_state_matches_decode():
+    p = ssm_lib.mamba_init(jax.random.PRNGKey(2), 16, expand=2, state=4,
+                           dtype=jnp.float32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 24, 16)) * 0.5, jnp.float32)
+    _, st = ssm_lib.mamba_apply(p, x, chunk=8, return_state=True)
+    cache = ssm_lib.mamba_init_cache(p, 1, jnp.float32)
+    for t in range(24):
+        _, cache = ssm_lib.mamba_decode(p, x[:, t:t + 1], cache)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(cache["h"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["conv"]),
+                               np.asarray(cache["conv"]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_mlstm_chunked_matches_sequential():
+    H = 2
+    p = xlstm_lib.mlstm_init(jax.random.PRNGKey(3), 16, H, expand=2,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 32, 16)) * 0.5, jnp.float32)
+    out_c = xlstm_lib.mlstm_apply(p, x, H, chunk=8)
+    cache = xlstm_lib.mlstm_init_cache(p, 2, H)
+    outs = []
+    for t in range(32):
+        o, cache = xlstm_lib.mlstm_decode(p, x[:, t:t + 1], cache, H)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mlstm_state_handoff():
+    H = 2
+    p = xlstm_lib.mlstm_init(jax.random.PRNGKey(4), 16, H, expand=2,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16)) * 0.5, jnp.float32)
+    _, st = xlstm_lib.mlstm_apply(p, x, H, chunk=4, return_state=True)
+    cache = xlstm_lib.mlstm_init_cache(p, 1, H)
+    for t in range(16):
+        _, cache = xlstm_lib.mlstm_decode(p, x[:, t:t + 1], cache, H)
+    np.testing.assert_allclose(np.asarray(st["C"]), np.asarray(cache["C"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["m"]), np.asarray(cache["m"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_apply_matches_decode():
+    H = 2
+    p = xlstm_lib.slstm_init(jax.random.PRNGKey(5), 16, H, jnp.float32)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 20, 16)) * 0.5, jnp.float32)
+    out_a = xlstm_lib.slstm_apply(p, x, H)
+    cache = xlstm_lib.slstm_init_cache(p, 2)
+    outs = []
+    for t in range(20):
+        o, cache = xlstm_lib.slstm_decode(p, x[:, t:t + 1], cache, H)
+        outs.append(o)
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_s),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,183 @@
+"""Unit tests for CSR, partitioners, and the hybrid storage architecture."""
+import numpy as np
+import pytest
+
+from repro.storage.csr import from_edges, symmetrize
+from repro.storage.hybrid import (VIRT_BIT, build_hybrid, mini_degree,
+                                  mini_offset)
+from repro.storage.partition import partition_bf, partition_lplf
+from repro.storage.rmat import rmat_graph
+
+from conftest import small_graph
+
+
+# ----------------------------------------------------------------------
+# CSR
+# ----------------------------------------------------------------------
+
+def test_csr_from_edges_basic():
+    g = from_edges(4, [0, 0, 1, 2, 3, 3], [1, 2, 2, 3, 0, 0])
+    g.validate()
+    assert g.num_vertices == 4
+    assert list(g.neighbors(0)) == [1, 2]
+    assert list(g.neighbors(3)) == [0]  # dedup dropped the duplicate
+
+
+def test_csr_drops_self_loops():
+    g = from_edges(3, [0, 1, 2], [0, 2, 1])
+    assert g.num_edges == 2
+
+
+def test_symmetrize():
+    g = from_edges(3, [0, 1], [1, 2])
+    s = symmetrize(g)
+    s.validate()
+    assert sorted(s.neighbors(1).tolist()) == [0, 2]
+    assert s.num_edges == 4
+
+
+# ----------------------------------------------------------------------
+# Partitioners
+# ----------------------------------------------------------------------
+
+def _check_partition(part, degrees):
+    goff = part.global_offsets()
+    # non-overlapping placements
+    order = np.argsort(goff)
+    ends = goff[order] + degrees[order]
+    assert np.all(goff[order][1:] >= ends[:-1]), "overlapping edge ranges"
+    # non-giant lists never straddle a block boundary
+    for i, d in enumerate(degrees):
+        if d <= part.block_edges:
+            assert part.offset_in_block[i] + d <= part.block_edges
+    # fill bookkeeping is consistent
+    fill = np.zeros(part.num_blocks, dtype=np.int64)
+    for i, d in enumerate(degrees):
+        span = max(1, -(-int(d) // part.block_edges))
+        b = part.block_of[i]
+        if span == 1:
+            fill[b] += d
+        else:
+            for s in range(span):
+                fill[b + s] += min(d - s * part.block_edges,
+                                   part.block_edges)
+    assert np.array_equal(fill, part.block_fill)
+
+
+@pytest.mark.parametrize("maker", [partition_lplf, partition_bf])
+def test_partition_invariants(maker):
+    rng = np.random.default_rng(0)
+    degrees = rng.integers(3, 50, size=500).astype(np.int64)
+    degrees[::97] = 2000  # giants spanning blocks
+    part = maker(degrees, block_edges=64)
+    _check_partition(part, degrees)
+    # giants got exclusive spans
+    for i, d in enumerate(degrees):
+        if d > 64:
+            assert part.offset_in_block[i] == 0
+            assert part.block_span[part.block_of[i]] == -(-int(d) // 64)
+
+
+def test_lplf_window_lastfit():
+    # degrees that force window behavior: block capacity 10, window 2
+    degrees = np.array([6, 6, 3, 2], dtype=np.int64)
+    part = partition_lplf(degrees, block_edges=10, window=2)
+    # v0 -> block0, v1 -> block1 (doesn't fit b0), v2 -> rightmost fit = b1,
+    # v3 -> rightmost fit = b1 (1 slot left? 6+3=9, +2 > 10 -> b0)
+    assert part.block_of[0] == 0 and part.block_of[1] == 1
+    assert part.block_of[2] == 1
+    assert part.block_of[3] == 0
+
+
+def test_bf_tighter_than_lplf_on_fragmentation():
+    rng = np.random.default_rng(1)
+    degrees = rng.integers(3, 60, size=2000).astype(np.int64)
+    frag_bf = partition_bf(degrees, block_edges=64).fragmentation()
+    frag_lplf = partition_lplf(degrees, block_edges=64).fragmentation()
+    assert frag_bf <= frag_lplf + 1e-9
+
+
+# ----------------------------------------------------------------------
+# Hybrid storage
+# ----------------------------------------------------------------------
+
+def test_example_5_1():
+    """The paper's Example 5.1, verbatim: delta_deg=3, 10 large vertices,
+    500 of degree 3, 1000 of degree 2, 2000 of degree 1; theta_id[3]=10,
+    theta_id[2]=510, theta_id[1]=1510, theta_id[0]=3510. Vertex v'_1200
+    has degree 2 and offset (510-10)*3 + (1200-510)*2 = 2880."""
+    theta_id = np.array([3510, 1510, 510, 10], dtype=np.int64)
+    assert theta_id[3] == 10 and theta_id[0] == 3510
+    assert mini_degree(np.array([1200]), theta_id)[0] == 2
+    off = mini_offset(np.array([1200]), theta_id)[0]
+    assert off == (510 - 10) * 3 + (1200 - 510) * 2  # = 2880
+    # spot-check more ids: first mini vertex has the max mini degree
+    assert mini_degree(np.array([10]), theta_id)[0] == 3
+    assert mini_offset(np.array([10]), theta_id)[0] == 0
+    assert mini_degree(np.array([509, 510, 1510, 3509, 3510]),
+                       theta_id).tolist() == [3, 2, 1, 1, 0]
+
+
+@pytest.mark.parametrize("partitioner", ["lplf", "bf"])
+@pytest.mark.parametrize("block_edges", [16, 64])
+def test_hybrid_roundtrip(partitioner, block_edges):
+    """Every vertex's adjacency list must be exactly recoverable."""
+    g = small_graph(n=300, m=3000, seed=2)
+    hg = build_hybrid(g, delta_deg=2, partitioner=partitioner,
+                      block_edges=block_edges)
+    deg = g.degrees()
+    for v in range(g.num_vertices):
+        nid = hg.v2id[v]
+        assert nid >= 0
+        assert int(hg.degree_of(nid)) == deg[v]
+        got = sorted(hg.neighbors_new(int(nid)).tolist())
+        want = sorted(hg.v2id[g.neighbors(v)].tolist())
+        assert got == want, f"vertex {v} adjacency mismatch"
+
+
+def test_hybrid_virtual_vertices_and_invariant():
+    g = small_graph(n=300, m=3000, seed=3)
+    hg = build_hybrid(g, delta_deg=2, block_edges=64)
+    off = hg.offsets_untagged()
+    # offsets strictly increasing after reorder (degree-invariant restored)
+    assert np.all(np.diff(off) >= 0)
+    # virtual vertices tagged via high bit and never mapped to originals
+    virt = (hg.offsets_tagged[:hg.num_entities] & VIRT_BIT) != 0
+    assert np.array_equal(virt, hg.is_virtual(np.arange(hg.num_entities)))
+    assert np.all(hg.id2v[:hg.num_entities][virt] == -1)
+    # every fragmented block has exactly one boundary marker
+    fills = np.zeros(hg.num_blocks, dtype=np.int64)
+    ends = off[:hg.num_entities][virt]
+    assert np.unique(ends).shape == ends.shape
+
+
+def test_hybrid_mini_ordering_and_theta():
+    g = small_graph(n=500, m=2000, seed=4)
+    hg = build_hybrid(g, delta_deg=2)
+    ids = np.arange(hg.mini_start, hg.num_total)
+    degs = hg.degree_of(ids)
+    # descending degree order in the mini region
+    assert np.all(np.diff(degs) <= 0)
+    assert np.all(degs <= hg.delta_deg)
+    # theta is the region boundary table
+    assert hg.theta_id[hg.delta_deg] == hg.mini_start
+    # closed-form degrees match CSR truth
+    orig = hg.id2v[ids]
+    assert np.array_equal(degs, g.degrees()[orig])
+
+
+def test_hybrid_memory_accounting():
+    g = rmat_graph(scale=9, avg_degree=6, seed=5)
+    hg = build_hybrid(g)
+    # degree-field elimination should beat the naive 12B/vertex index as
+    # long as mini edges are cheaper than saved degree fields (paper Fig 15)
+    assert hg.index_memory_bytes() > 0
+    assert hg.disk_bytes() == 4 * hg.num_blocks * hg.block_edges
+
+
+def test_hybrid_no_large_in_mini_region():
+    g = small_graph(n=400, m=4000, seed=6)
+    hg = build_hybrid(g, delta_deg=3)
+    ids = np.arange(hg.num_entities)
+    real = ~hg.is_virtual(ids)
+    assert np.all(hg.degree_of(ids[real]) > hg.delta_deg)

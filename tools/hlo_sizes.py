@@ -1,0 +1,54 @@
+"""Dump the largest tensor shapes in a cell's compiled HLO.
+
+Usage: PYTHONPATH=src python tools/hlo_sizes.py <arch> <shape> [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import collections  # noqa: E402
+import re           # noqa: E402
+import sys          # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import make_cell            # noqa: E402
+
+BW = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "f16": 2,
+      "s8": 1, "u8": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mp = "--multi-pod" in sys.argv
+    cell = make_cell(arch, shape)
+    mesh = make_production_mesh(multi_pod=mp)
+    with mesh:
+        j = jax.jit(cell.step, in_shardings=cell.in_specs(mesh),
+                    out_shardings=cell.out_specs(mesh),
+                    donate_argnums=cell.donate)
+        comp = j.lower(*cell.args_abstract).compile()
+    print(comp.memory_analysis())
+    hlo = comp.as_text()
+    sizes = collections.Counter()
+    where = {}
+    for line in hlo.splitlines():
+        m = re.search(r"=\s+(\w+)\[([\d,]+)\]", line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        if dt not in BW:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        key = f"{dt}[{dims}]"
+        if n * BW[dt] > sizes[key]:
+            sizes[key] = n * BW[dt]
+            mm = re.search(r'op_name="([^"]+)"', line)
+            where[key] = (mm.group(1)[:110] if mm else "?")
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:20]:
+        print(f"{v/1e9:8.2f} GB  {k:46s} {where.get(k,'')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline table.
+
+Usage: python tools/make_roofline.py [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = ["starcoder2-3b", "qwen1.5-32b", "qwen2.5-14b", "gemma3-4b",
+              "qwen2-moe-a2.7b", "llama4-scout-17b-a16e", "internvl2-26b",
+              "xlstm-1.3b", "jamba-1.5-large-398b", "whisper-small"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str):
+    recs = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        r = json.load(open(f))
+        if r.get("variant", "baseline") != "baseline":
+            continue                       # perf variants live in §Perf
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def render(recs, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "roofline frac | MODEL/HLO | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped"
+                             f" | — | — | — |")
+                continue
+            t = r["roofline"]
+            mem_gb = (r.get("temp_size_in_bytes", 0)
+                      + r.get("argument_size_in_bytes", 0)) / 1e9
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"{t['dominant']} | {t['roofline_fraction']:.3f} | "
+                f"{t['model_vs_hlo_flops']:.3f} | {mem_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs, mesh: str) -> str:
+    rows = [(k, r) for k, r in recs.items()
+            if k[2] == mesh and r["status"] == "ok"]
+    worst = sorted(rows, key=lambda kr:
+                   kr[1]["roofline"]["roofline_fraction"])[:5]
+    coll = sorted(rows, key=lambda kr:
+                  -kr[1]["roofline"]["collective_s"]
+                  / max(max(kr[1]["roofline"]["compute_s"],
+                            kr[1]["roofline"]["memory_s"]), 1e-12))[:5]
+    out = ["worst roofline fraction:"]
+    for (a, s, _), r in worst:
+        out.append(f"  {a} x {s}: frac={r['roofline']['roofline_fraction']:.3f} "
+                   f"dom={r['roofline']['dominant']}")
+    out.append("most collective-bound (collective / max(other)):")
+    for (a, s, _), r in coll:
+        t = r["roofline"]
+        out.append(f"  {a} x {s}: coll={fmt_s(t['collective_s'])} "
+                   f"compute={fmt_s(t['compute_s'])} mem={fmt_s(t['memory_s'])}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--summary", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.results)
+    print(render(recs, args.mesh))
+    if args.summary:
+        print()
+        print(summary(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()
