@@ -6,6 +6,11 @@ WCC iteration, the set of blocks owning frontier vertices (in block-id
 order, as a synchronous system would scan them). OPT is Belady's optimal
 eviction, SUB evicts blocks unused in the next iteration, LRU is standard.
 ACGraph's line is the async engine's measured I/O with a ~1% buffer.
+
+Also sweeps the engine's own pluggable cached-queue pull policies
+(``fifo`` / ``priority`` / ``lru``, see ``core/scheduler.py``) on the
+same workloads — the async analogue of the eviction-policy question:
+which cached block should the executor drain first?
 """
 from __future__ import annotations
 
@@ -67,7 +72,25 @@ def simulate(trace, capacity, policy):
     return loads
 
 
+def pull_policy_sweep() -> None:
+    """Engine cached-queue policy sweep: measured I/O + ticks per policy."""
+    from repro.core.scheduler import CACHED_POLICIES
+
+    for algo_name in ("bfs", "wcc"):
+        g = bench_graph(scale=11, symmetric=(algo_name == "wcc"))
+        for policy in sorted(CACHED_POLICIES):
+            eng, hg = make_engine(g, pool_slots=32, cached_policy=policy)
+            if algo_name == "bfs":
+                _, m = run_bfs(eng, hg, 0)
+            else:
+                _, m = run_wcc(eng, hg)
+            emit(f"pull_policy_{algo_name}_{policy}", 0.0,
+                 f"io_{m.io_blocks}_ticks_{m.ticks}_edges_"
+                 f"{m.edges_scanned}")
+
+
 def main() -> None:
+    pull_policy_sweep()
     for algo_name in ("bfs", "wcc"):
         g = bench_graph(scale=11, symmetric=(algo_name == "wcc"))
         eng, hg = make_engine(g, pool_slots=32)

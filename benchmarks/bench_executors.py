@@ -1,14 +1,23 @@
 """Paper Fig. 16: scaling with worker threads — executor lanes 1..16;
 modeled compute scales with lanes while the I/O pipeline stays saturated.
+
+Plus the executor-backend comparison: ``gather`` (XLA searchsorted/gather
+expansion) vs ``pallas`` (the TPU-native ``frontier_relax`` MXU kernel)
+on the *same* workload. Both backends produce identical counters, so the
+derived columns double as a parity check; wall time is reported per
+backend (on CPU the Pallas kernel runs interpreted — the comparison is
+architectural there, and becomes a real kernel race on TPU).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine
-from repro.algorithms import run_wcc
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, make_engine, timed
+from repro.algorithms import run_bfs, run_wcc
 from repro.io_sim.ssd_model import SSDModel
 
 
-def main() -> None:
+def lanes_sweep() -> None:
     g = bench_graph(scale=12, symmetric=True)
     base = None
     for lanes in (1, 2, 4, 8, 16):
@@ -20,6 +29,37 @@ def main() -> None:
         emit(f"fig16_wcc_lanes{lanes:02d}", 0.0,
              f"ticks_{m.ticks}_speedup_{base/rt:.2f}x_modeled_"
              f"{model.modeled_runtime(m)*1e3:.2f}ms")
+
+
+def backend_comparison() -> None:
+    """gather vs pallas on identical BFS / WCC workloads."""
+    g_bfs = bench_graph(scale=10, symmetric=False, seed=3)
+    g_wcc = bench_graph(scale=10, symmetric=True, seed=3)
+    results: dict[str, dict] = {}
+    for backend in ("gather", "pallas"):
+        eng, hg = make_engine(g_bfs, executor=backend)
+        (_, m_bfs), secs_bfs = timed(run_bfs, eng, hg, 0)
+        eng, hg = make_engine(g_wcc, executor=backend)
+        (_, m_wcc), secs_wcc = timed(run_wcc, eng, hg)
+        results[backend] = dict(m_bfs=m_bfs, m_wcc=m_wcc)
+        emit(f"exec_backend_{backend}_bfs", secs_bfs,
+             f"edges_{m_bfs.edges_scanned}_verts_"
+             f"{m_bfs.vertices_processed}_ticks_{m_bfs.ticks}")
+        emit(f"exec_backend_{backend}_wcc", secs_wcc,
+             f"edges_{m_wcc.edges_scanned}_verts_"
+             f"{m_wcc.vertices_processed}_ticks_{m_wcc.ticks}")
+    for algo in ("m_bfs", "m_wcc"):
+        mg, mp = results["gather"][algo], results["pallas"][algo]
+        match = (mg.edges_scanned == mp.edges_scanned
+                 and mg.vertices_processed == mp.vertices_processed
+                 and mg.ticks == mp.ticks)
+        emit(f"exec_backend_parity_{algo[2:]}", 0.0,
+             "identical" if match else "MISMATCH")
+
+
+def main() -> None:
+    lanes_sweep()
+    backend_comparison()
 
 
 if __name__ == "__main__":

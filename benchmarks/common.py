@@ -20,6 +20,10 @@ from repro.storage.rmat import rmat_graph
 
 BLOCK_EDGES = 256   # smaller blocks -> richer scheduling at bench scale
 
+#: every emit() row lands here too, so run.py --json can persist the
+#: perf trajectory without scraping stdout
+RESULTS: list[dict] = []
+
 
 def bench_graph(scale: int = 12, avg_degree: int = 16, seed: int = 0,
                 symmetric: bool = False) -> CSRGraph:
@@ -31,12 +35,13 @@ def make_engine(g: CSRGraph, *, sync: bool = False, pool_slots: int = 64,
                 lanes: int = 4, partitioner: str = "lplf",
                 delta_deg: int = 2, block_edges: int = BLOCK_EDGES,
                 trace: bool = False, cached_policy: str = "fifo",
-                chunk_size: int = 128):
+                executor: str = "gather", chunk_size: int = 128):
     hg = build_hybrid(g, delta_deg=delta_deg, partitioner=partitioner,
                       block_edges=block_edges)
     cfg = EngineConfig(lanes=lanes, prefetch=8, queue_depth=16,
                        pool_slots=pool_slots, chunk_size=chunk_size,
-                       sync=sync, trace=trace, cached_policy=cached_policy)
+                       sync=sync, trace=trace, cached_policy=cached_policy,
+                       executor=executor)
     return Engine(hg, cfg), hg
 
 
@@ -45,6 +50,8 @@ def ssd() -> SSDModel:
 
 
 def emit(name: str, seconds: float, derived) -> None:
+    RESULTS.append({"name": name, "us_per_call": seconds * 1e6,
+                    "derived": str(derived)})
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 

@@ -1,11 +1,16 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines. Run with:
-    PYTHONPATH=src python -m benchmarks.run [--only fig8,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,...] [--json PATH]
+
+``--json PATH`` additionally writes every measurement as a JSON list of
+``{"name", "us_per_call", "derived"}`` rows (plus per-module wall time),
+so the perf trajectory can be committed as ``BENCH_*.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -30,9 +35,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated substrings to select benchmarks")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write results as JSON to PATH")
     args = ap.parse_args()
     sel = [s for s in args.only.split(",") if s]
     failures = 0
+    module_times: dict[str, float] = {}
     print("name,us_per_call,derived")
     for name, mod in MODULES:
         if sel and not any(s in name for s in sel):
@@ -40,12 +48,21 @@ def main() -> None:
         t0 = time.time()
         try:
             __import__(mod, fromlist=["main"]).main()
-            print(f"# {name} done in {time.time()-t0:.1f}s",
+            module_times[name] = time.time() - t0
+            print(f"# {name} done in {module_times[name]:.1f}s",
                   file=sys.stderr)
         except Exception:                                  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
+    if args.json:
+        from benchmarks.common import RESULTS
+        with open(args.json, "w") as f:
+            json.dump({"results": RESULTS,
+                       "module_seconds": module_times,
+                       "failures": failures}, f, indent=1)
+        print(f"# wrote {len(RESULTS)} rows to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

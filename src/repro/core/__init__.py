@@ -4,9 +4,20 @@ from repro.core.afs import AdaptiveFrontierSet
 from repro.core.api import Algorithm
 from repro.core.engine import (Engine, EngineConfig, Metrics, asyncRun,
                                syncRun, foreach_vertex_frontier)
+from repro.core.executor import (EXECUTORS, ExecResult, ExecTables,
+                                 ExecutorBackend, GatherExecutor,
+                                 PallasExecutor, make_executor)
+from repro.core.pool import BufferPool
+from repro.core.scheduler import (CACHED_POLICIES, FifoPolicy, LruPolicy,
+                                  PriorityPolicy, PullPolicy, PullView,
+                                  Scheduler, make_pull_policy)
 
 __all__ = [
     "BlockState", "Event", "transition", "TRANSITIONS",
     "AdaptiveFrontierSet", "Engine", "EngineConfig", "Metrics",
     "asyncRun", "syncRun", "foreach_vertex_frontier", "Algorithm",
+    "EXECUTORS", "ExecResult", "ExecTables", "ExecutorBackend",
+    "GatherExecutor", "PallasExecutor", "make_executor", "BufferPool",
+    "CACHED_POLICIES", "FifoPolicy", "LruPolicy", "PriorityPolicy",
+    "PullPolicy", "PullView", "Scheduler", "make_pull_policy",
 ]

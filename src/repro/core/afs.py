@@ -96,12 +96,11 @@ class AdaptiveFrontierSet:
             if self._count <= SPARSE_CAPACITY:  # shrink back
                 self._to_sparse()
             return True
-        members = list(self._sparse[:self._count])
-        if v not in [int(m) for m in members]:
+        members = [int(m) for m in self._sparse[:self._count]]
+        if v not in members:
             return False
-        members.remove(v)
-        self._sparse[:len(members)] = np.asarray(members or [0],
-                                                 dtype=np.uint32)[:len(members)]
+        members.remove(int(v))
+        self._sparse[:len(members)] = np.asarray(members, dtype=np.uint32)
         self._count -= 1
         return True
 
@@ -129,5 +128,5 @@ class AdaptiveFrontierSet:
     def payload_nbytes(self) -> int:
         """Always exactly the 45-byte payload + 4B start + 2B count."""
         payload = self._bitmap.nbytes if self.dense else self._sparse.nbytes
-        assert payload <= PAYLOAD_BYTES + 0 or True
+        assert payload <= PAYLOAD_BYTES
         return 4 + 2 + PAYLOAD_BYTES

@@ -13,10 +13,12 @@ An :class:`Algorithm` bundles:
   * ``state``        initial vertex-state pytree (dict of [V'] arrays),
   * ``key``          which state array receives the scatter-combine,
   * ``combine``      'min' or 'add',
-  * ``apply``        per-source message (Alg. 1 line 7),
+  * ``apply``        per-source message (Alg. 1 line 7), called with
+                     ``(state, vids, mask, degs)``,
   * ``edge_value``   per-edge candidate from the message (propagation),
   * ``on_process``   state mutation for processed sources (e.g. PPR's
-                     residual consumption) applied before the scatter,
+                     residual consumption), called with
+                     ``(state, processed)`` before the scatter,
   * ``activated``    activation predicate from (old, new) key values —
                      the batched equivalent of ``propagation`` returning a
                      positive priority (Alg. 1 lines 13-15),
@@ -39,16 +41,18 @@ class Algorithm:
     key: str
     #: 'min' or 'add'
     combine: str
-    #: (state, vids[int32 L,Vm], mask[bool L,Vm]) -> msgs [L,Vm] (key dtype)
-    apply: Callable[[StateT, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    #: (state, vids[int32 L,Vm], mask[bool L,Vm], degs[int32 L,Vm])
+    #: -> msgs [L,Vm] (key dtype)
+    apply: Callable[[StateT, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                    jnp.ndarray]
     #: (msg_per_edge) -> candidate value per edge
     edge_value: Callable[[jnp.ndarray], jnp.ndarray]
     #: (old_key[V'], new_key[V'], deg[V']) -> activated bool[V']
     activated: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
     #: (state, deg[V']) -> int32 priority [V'] (higher scheduled first)
     priority: Callable[[StateT, jnp.ndarray], jnp.ndarray]
-    #: optional consumption step for processed sources
-    on_process: Callable[[StateT, jnp.ndarray, jnp.ndarray], StateT] | None = None
+    #: optional consumption step: (state, processed bool[V']) -> state
+    on_process: Callable[[StateT, jnp.ndarray], StateT] | None = None
 
     def neutral(self, dtype) -> jnp.ndarray:
         if self.combine == "min":

@@ -9,15 +9,35 @@ The engine advances a deterministic *scheduler tick* inside a
   submit (frontier + block-state updates, resident-block *reuse*) ->
   finish (reactivated blocks re-enter the cached queue with NO extra I/O).
 
-All of the paper's claims that we benchmark (read/work inflation, reuse,
-stalls) come out of this loop's counters. Sequential consistency (Sec. 4.4)
-holds because every algorithm's update is a commutative combiner; any tick
-schedule is a valid sequential order. ``sync=True`` gives the special-case
-synchronous mode of Sec. 4.3 (fresh worklist per iteration).
+The tick is layered across three tiers, mirroring the paper's
+architecture (Sec. 4.1):
+
+  * :class:`~repro.core.scheduler.Scheduler` — block-state transitions,
+    the preload priority queue, and pluggable cached-queue pull policies
+    (``fifo`` / ``priority`` / ``lru``);
+  * :class:`~repro.core.pool.BufferPool` — slot accounting (admission,
+    release, early-stop reuse eviction);
+  * :class:`~repro.core.executor.ExecutorBackend` — batched
+    apply/propagation; ``gather`` (searchsorted/gather expansion) and
+    ``pallas`` (the TPU-native ``frontier_relax`` kernel) produce
+    identical results.
+
+This module is the orchestrator: it threads the carry through the tiers
+and owns only the frontier/submit step and the counters. All of the
+paper's claims that we benchmark (read/work inflation, reuse, stalls)
+come out of this loop's counters. Sequential consistency (Sec. 4.4)
+holds because every algorithm's update is a commutative combiner; any
+tick schedule is a valid sequential order. ``sync=True`` gives the
+special-case synchronous mode of Sec. 4.3 (fresh worklist per
+iteration).
 
 Mini vertices (deg <= delta_deg, Sec. 5.2) are grouped into pseudo-blocks
 with zero I/O cost — they are always memory-resident, which is exactly the
 hybrid storage architecture's point.
+
+Counters are carried as (hi, lo) uint32 limb pairs — a true 64-bit
+accumulator without flipping ``jax_enable_x64`` — so ``edges_scanned`` /
+``io_blocks`` do not wrap on billion-edge runs.
 """
 from __future__ import annotations
 
@@ -30,13 +50,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import Algorithm
+from repro.core.executor import ExecTables, make_executor
+from repro.core.pool import BufferPool
+from repro.core.scheduler import (NEG_INF, S_CACHED, S_INACTIVE, S_LOADING,
+                                  S_UNCACHED, PullView, Scheduler,
+                                  make_pull_policy)
 from repro.storage.hybrid import HybridGraph, mini_offset
 
-# persistent per-tick block states (PROCESSING/REACTIVATED are intra-tick)
-S_INACTIVE, S_UNCACHED, S_LOADING, S_CACHED = 0, 1, 2, 3
-
-NEG_INF = np.iinfo(np.int32).min // 2
 TRACE_LEN = 16384
+
+_COUNTERS = ("io_ops", "io_blocks", "edges_scanned", "vertices_processed",
+             "reuse_activations", "blocks_reused", "exec_idle_ticks",
+             "io_active_ticks", "barriers", "ticks")
+
+
+# ---- 64-bit counters as uint32 limb pairs ----------------------------
+
+def _c64_zero():
+    z = jnp.zeros((), jnp.uint32)
+    return (z, z)
+
+
+def _c64_add(c, inc):
+    """Add a non-negative int32 increment with carry into the high limb."""
+    hi, lo = c
+    lo2 = lo + inc.astype(jnp.uint32)
+    return (hi + (lo2 < lo).astype(jnp.uint32), lo2)
+
+
+def _c64_int(c) -> int:
+    return (int(c[0]) << 32) | int(c[1])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +89,8 @@ class EngineConfig:
     queue_depth: int = 16       # io_uring-style in-flight cap
     pool_slots: int = 64        # buffer pool capacity in 4 KB units
     chunk_size: int = 256       # mini-vertex pseudo-block width
-    cached_policy: str = "fifo"  # 'fifo' (paper) | 'priority' (beyond-paper)
+    cached_policy: str = "fifo"  # 'fifo' (paper) | 'priority' | 'lru'
+    executor: str = "gather"    # 'gather' | 'pallas' (frontier_relax kernel)
     sync: bool = False          # Sec. 4.3 synchronous special case
     early_stop: int = 0         # consecutive-reuse eviction threshold (0=off)
     io_latency: int = 1         # ticks from submit to completion
@@ -56,6 +100,8 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class Metrics:
+    """Engine counters; plain python ints, 64-bit safe (the device-side
+    accumulators are uint32 limb pairs, decoded in :meth:`Engine.run`)."""
     io_ops: int                 # async read submissions
     io_blocks: int              # 4 KB blocks transferred
     edges_scanned: int
@@ -88,6 +134,19 @@ class Engine:
         self.hg = hg
         self.cfg = cfg
         self._build_tables()
+        self.pool = BufferPool(self.pool_slots, self.t_sched_io,
+                               early_stop=cfg.early_stop)
+        self.scheduler = Scheduler(
+            block_io=self.t_sched_io, v_sched=self.t_v_sched,
+            v_deg=self.t_v_deg, num_blocks=self.B, prefetch=self.P,
+            lanes=self.E, queue_depth=cfg.queue_depth,
+            io_latency=cfg.io_latency,
+            policy=make_pull_policy(cfg.cached_policy))
+        self.executor = make_executor(cfg.executor, ExecTables(
+            all_edges=self.t_all_edges, v_start=self.t_v_start,
+            v_deg=self.t_v_deg, is_real=self.t_is_real,
+            sched_first=self.t_sched_first, V=self.V, Vm=self.Vm,
+            We=self.We, EK=self.EK))
         self._compiled: dict[Any, Any] = {}
 
     # ------------------------------------------------------------------
@@ -139,9 +198,15 @@ class Engine:
                             minlength=B)
         We = int(max(tot_e.max(initial=1.0), 1.0))
         max_span = int(hg.block_span.max(initial=1))
+        # widest per-block edge window (pallas executor): max over blocks
+        # of (last edge slot of any member vertex) - (first vertex's start)
+        base_b = v_start[np.minimum(sched_first[:-1], max(V - 1, 0))]
+        top_b = np.zeros(B, dtype=np.int64)
+        np.maximum.at(top_b, v_sched, v_start + deg)
+        EK = int(max(np.maximum(top_b - base_b, 0).max(initial=1), 1))
 
         self.V, self.B, self.NB = V, B, NB
-        self.Vm, self.We = Vm, We
+        self.Vm, self.We, self.EK = Vm, We, EK
         self.E = int(min(cfg.lanes, B))
         self.P = int(min(cfg.prefetch, B))
         self.pool_slots = int(max(cfg.pool_slots, max_span))
@@ -171,8 +236,7 @@ class Engine:
             self._compiled[key] = jax.jit(
                 functools.partial(self._run_impl, algo))
         out_state, counters, trace = self._compiled[key](front0, state0)
-        counters = {k: int(v) for k, v in counters.items()}
-        metrics = Metrics(**counters)
+        metrics = Metrics(**{k: _c64_int(v) for k, v in counters.items()})
         out_state = {k: np.asarray(v) for k, v in out_state.items()}
         if cfg.trace:
             trace = {k: np.asarray(v)[:min(metrics.ticks, TRACE_LEN)]
@@ -181,30 +245,15 @@ class Engine:
         return out_state, metrics, None
 
     # ------------------------------------------------------------------
-    def _aggregates(self, algo, state, front):
-        """Per-block active counts and priorities (worklist metadata)."""
-        v_prio = algo.priority(state, self.t_v_deg).astype(jnp.int32)
-        nact = jax.ops.segment_sum(front.astype(jnp.int32), self.t_v_sched,
-                                   num_segments=self.B)
-        prio = jax.ops.segment_max(jnp.where(front, v_prio, NEG_INF),
-                                   self.t_v_sched, num_segments=self.B)
-        return nact, prio
-
     def _run_impl(self, algo: Algorithm, front0, state0):
         cfg = self.cfg
-        V, B, E, P = self.V, self.B, self.E, self.P
-        Vm, We = self.Vm, self.We
+        B = self.B
+        sched, pool, executor = self.scheduler, self.pool, self.executor
         i32 = jnp.int32
 
-        nact0, prio0 = self._aggregates(algo, state0, front0)
-        b_state0 = jnp.where(nact0 > 0,
-                             jnp.where(self.t_sched_io > 0, S_UNCACHED,
-                                       S_CACHED),
-                             S_INACTIVE).astype(i32)
-        counters0 = {k: jnp.zeros((), i32) for k in (
-            "io_ops", "io_blocks", "edges_scanned", "vertices_processed",
-            "reuse_activations", "blocks_reused", "exec_idle_ticks",
-            "io_active_ticks", "barriers", "ticks")}
+        nact0, prio0 = sched.refresh(algo, state0, front0)
+        b_state0 = sched.initial_block_state(nact0)
+        counters0 = {k: _c64_zero() for k in _COUNTERS}
         trace0 = {k: jnp.zeros(TRACE_LEN, i32)
                   for k in ("io_blocks", "lanes", "edges", "frontier")} \
             if cfg.trace else {}
@@ -214,7 +263,7 @@ class Engine:
             front_next=jnp.zeros_like(front0),
             b_state=b_state0,
             b_issue=jnp.zeros(B, i32), b_stamp=jnp.zeros(B, i32),
-            b_reuse=jnp.zeros(B, i32),
+            b_reuse=jnp.zeros(B, i32), b_used=jnp.zeros(B, i32),
             b_nactive=nact0, b_prio=prio0,
             used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
             counters=counters0, trace=trace0)
@@ -228,185 +277,100 @@ class Engine:
 
         def tick(c):
             state, front = c["state"], c["front"]
-            b_state, b_prio = c["b_state"], c["b_prio"]
-            b_nactive = c["b_nactive"]
+            b_prio, b_nactive = c["b_prio"], c["b_nactive"]
             t = c["t"]
             cnt = dict(c["counters"])
 
             # ---- 1. async I/O completions -----------------------------
-            done = (b_state == S_LOADING) & (t - c["b_issue"]
-                                             >= cfg.io_latency)
-            b_state = jnp.where(done, S_CACHED, b_state)
-            b_stamp = jnp.where(done, t, c["b_stamp"])
+            b_state, b_stamp = sched.complete_io(c["b_state"], c["b_issue"],
+                                                 c["b_stamp"], t)
 
             # ---- 2. preload: priority queue over uncached blocks -------
-            inflight = jnp.sum(b_state == S_LOADING)
-            want = (b_state == S_UNCACHED) & (b_nactive > 0)
-            pkey = jnp.where(want, b_prio, NEG_INF)
-            _, pidx = jax.lax.top_k(pkey, P)
-            pvalid = pkey[pidx] > NEG_INF
-            budget = jnp.clip(cfg.queue_depth - inflight, 0, P)
-            within = jnp.arange(P, dtype=i32) < budget
-            spans = self.t_sched_io[pidx]
-            free = self.pool_slots - c["used_slots"]
-            cum_sp = jnp.cumsum(spans * (pvalid & within))
-            take = pvalid & within & (cum_sp <= free)
-            b_state = b_state.at[pidx].set(
-                jnp.where(take, S_LOADING, b_state[pidx]))
-            b_issue = c["b_issue"].at[pidx].set(
-                jnp.where(take, t, c["b_issue"][pidx]))
-            used_slots = c["used_slots"] + jnp.sum(spans * take)
-            cnt["io_ops"] += jnp.sum(take).astype(i32)
-            io_now = jnp.sum(spans * take).astype(i32)
-            cnt["io_blocks"] += io_now
+            pre = sched.preload(b_state, c["b_issue"], b_prio, b_nactive,
+                                c["used_slots"], pool, t)
+            b_state, b_issue = pre.b_state, pre.b_issue
+            used_slots = pre.used_slots
+            cnt["io_ops"] = _c64_add(cnt["io_ops"], pre.io_ops)
+            cnt["io_blocks"] = _c64_add(cnt["io_blocks"], pre.io_blocks)
 
-            # ---- 3. pull: cached-queue dominance (FIFO by default) -----
-            ready = (b_state == S_CACHED) & (b_nactive > 0)
-            if cfg.cached_policy == "fifo":
-                ekey = jnp.where(ready, -b_stamp, NEG_INF)
-            else:
-                ekey = jnp.where(ready, b_prio, NEG_INF)
-            _, eidx = jax.lax.top_k(ekey, E)
-            lane_valid = ekey[eidx] > NEG_INF
+            # ---- 3. pull: cached-queue policy --------------------------
+            eidx, lane_valid, b_used = sched.pull(
+                b_state, b_nactive,
+                PullView(b_stamp=b_stamp, b_prio=b_prio,
+                         b_used=c["b_used"], t=t))
 
             # ---- 4. process: batched apply / propagation ---------------
-            first = self.t_sched_first[eidx]
-            end = self.t_sched_first[eidx + 1]
-            vids = first[:, None] + jnp.arange(Vm, dtype=i32)[None, :]
-            inrange = vids < end[:, None]
-            vids_c = jnp.minimum(vids, V - 1)
-            vmask = (inrange & lane_valid[:, None] & front[vids_c]
-                     & self.t_is_real[vids_c])
-            degs = jnp.where(vmask, self.t_v_deg[vids_c], 0)
-            msgs = algo.apply(state, vids_c, vmask, degs)
-
-            processed = jnp.zeros(V, bool).at[vids_c.ravel()].max(
-                vmask.ravel())
-            if algo.on_process is not None:
-                state = algo.on_process(state, processed)
-            old_key = state[algo.key]
-
-            cum_e = jnp.cumsum(degs, axis=1)
-            tot = cum_e[:, -1]
-            slots = jnp.arange(We, dtype=i32)
-            owner = jax.vmap(
-                lambda ce: jnp.searchsorted(ce, slots, side="right"))(cum_e)
-            owner_c = jnp.minimum(owner, Vm - 1).astype(i32)
-            prev = cum_e - degs
-            within_e = slots[None, :] - jnp.take_along_axis(prev, owner_c,
-                                                            axis=1)
-            svalid = slots[None, :] < tot[:, None]
-            starts_lane = self.t_v_start[vids_c]
-            gidx = jnp.take_along_axis(starts_lane, owner_c, axis=1) + within_e
-            gidx = jnp.where(svalid, gidx, 0)
-            dst = self.t_all_edges[gidx]
-            msg_e = jnp.take_along_axis(msgs, owner_c, axis=1)
-            val = algo.edge_value(msg_e)
-
-            dstf = jnp.where(svalid, dst, V)
-            ext = jnp.concatenate([old_key,
-                                   algo.neutral(old_key.dtype)[None]])
-            if algo.combine == "min":
-                ext = ext.at[dstf.ravel()].min(val.ravel())
-            else:
-                ext = ext.at[dstf.ravel()].add(
-                    jnp.where(svalid, val, 0).ravel())
-            new_key = ext[:V]
-            activated = algo.activated(old_key, new_key, self.t_v_deg) \
-                & self.t_is_real
-            state = dict(state)
-            state[algo.key] = new_key
+            res = executor.execute(algo, state, front, eidx, lane_valid)
+            state = res.state
 
             # ---- 5. submit: frontier update + reuse accounting ---------
-            front1 = front & ~processed
+            front1 = front & ~res.processed
             if cfg.sync:
                 front2 = front1
-                front_next = c["front_next"] | activated
+                front_next = c["front_next"] | res.activated
             else:
-                front2 = front1 | activated
+                front2 = front1 | res.activated
                 front_next = c["front_next"]
             resident_v = (b_state[self.t_v_sched] == S_CACHED) | \
                          (b_state[self.t_v_sched] == S_LOADING)
-            cnt["reuse_activations"] += jnp.sum(
-                activated & resident_v).astype(i32)
+            cnt["reuse_activations"] = _c64_add(
+                cnt["reuse_activations"],
+                jnp.sum(res.activated & resident_v).astype(i32))
 
             # ---- 6. worklist metadata refresh ---------------------------
-            b_nactive2, b_prio2 = self._aggregates(algo, state, front2)
+            b_nactive2, b_prio2 = sched.refresh(algo, state, front2)
 
             # ---- 7. finish: reactivated blocks re-enter cached queue ----
-            pulled = jnp.zeros(B, bool).at[eidx].max(lane_valid)
-            reactivated = pulled & (b_nactive2 > 0)
-            b_reuse = jnp.where(reactivated, c["b_reuse"] + 1,
-                                jnp.where(pulled, 0, c["b_reuse"]))
-            if cfg.early_stop > 0:
-                evict = reactivated & (b_reuse > cfg.early_stop)
-            else:
-                evict = jnp.zeros(B, bool)
-            finished = pulled & (b_nactive2 == 0)
-            resident_b = (b_state == S_CACHED)
-            released = (finished | evict) & resident_b
-            b_state = jnp.where(finished, S_INACTIVE, b_state)
-            b_state = jnp.where(evict, S_UNCACHED, b_state)
-            b_stamp = jnp.where(reactivated & ~evict, t, b_stamp)
-            b_reuse = jnp.where(evict, 0, b_reuse)
-            used_slots = used_slots - jnp.sum(self.t_sched_io * released)
-            cnt["blocks_reused"] += jnp.sum(reactivated & ~evict).astype(i32)
+            fin = sched.finish(b_state, b_stamp, c["b_reuse"], b_nactive2,
+                               eidx, lane_valid, used_slots, pool, t)
+            b_state, b_stamp = fin.b_state, fin.b_stamp
+            b_reuse, used_slots = fin.b_reuse, fin.used_slots
+            cnt["blocks_reused"] = _c64_add(cnt["blocks_reused"],
+                                            fin.blocks_reused)
 
             # ---- 8. activation transitions for inactive blocks ----------
-            newly = (b_state == S_INACTIVE) & (b_nactive2 > 0)
-            b_state = jnp.where(newly & (self.t_sched_io > 0), S_UNCACHED,
-                                b_state)
-            goes_cached = newly & (self.t_sched_io == 0)
-            b_state = jnp.where(goes_cached, S_CACHED, b_state)
-            b_stamp = jnp.where(goes_cached, t, b_stamp)
+            b_state, b_stamp = sched.activate(b_state, b_stamp, b_nactive2,
+                                              t)
 
             # ---- 9. sync barrier (Sec. 4.3) ------------------------------
             if cfg.sync:
-                inflight_now = jnp.any(b_state == S_LOADING)
-                barrier = (~jnp.any(front2)) & (~inflight_now) \
-                    & jnp.any(front_next)
-                front2 = jnp.where(barrier, front_next, front2)
-                front_next = jnp.where(barrier, False, front_next)
-                nact_b, prio_b = self._aggregates(algo, state, front2)
-                b_nactive2 = jnp.where(barrier, nact_b, b_nactive2)
-                b_prio2 = jnp.where(barrier, prio_b, b_prio2)
-                # pool policy at barrier: resident blocks with work stay,
-                # the rest are released
-                drop = barrier & (b_state == S_CACHED) & (b_nactive2 == 0)
-                used_slots = used_slots - jnp.sum(self.t_sched_io * drop)
-                b_state = jnp.where(drop, S_INACTIVE, b_state)
-                wake = barrier & (b_state == S_INACTIVE) & (b_nactive2 > 0)
-                b_state = jnp.where(wake & (self.t_sched_io > 0), S_UNCACHED,
-                                    b_state)
-                b_state = jnp.where(wake & (self.t_sched_io == 0), S_CACHED,
-                                    b_state)
-                cnt["barriers"] += barrier.astype(i32)
+                (front2, front_next, b_state, b_nactive2, b_prio2,
+                 used_slots, barrier) = sched.barrier(
+                    algo, state, front2, front_next, b_state, b_nactive2,
+                    b_prio2, used_slots, pool)
+                cnt["barriers"] = _c64_add(cnt["barriers"],
+                                           barrier.astype(i32))
 
             # ---- 10. counters & trace -----------------------------------
             lanes_used = jnp.sum(lane_valid).astype(i32)
-            edges_now = jnp.sum(tot).astype(i32)
-            cnt["edges_scanned"] += edges_now
-            cnt["vertices_processed"] += jnp.sum(vmask).astype(i32)
-            cnt["exec_idle_ticks"] += ((lanes_used == 0)
-                                       & jnp.any(front2)).astype(i32)
-            cnt["io_active_ticks"] += (inflight + jnp.sum(take)
-                                       > 0).astype(i32)
-            cnt["ticks"] += 1
+            cnt["edges_scanned"] = _c64_add(cnt["edges_scanned"],
+                                            res.edges_scanned)
+            cnt["vertices_processed"] = _c64_add(cnt["vertices_processed"],
+                                                 res.vertices_processed)
+            cnt["exec_idle_ticks"] = _c64_add(
+                cnt["exec_idle_ticks"],
+                ((lanes_used == 0) & jnp.any(front2)).astype(i32))
+            cnt["io_active_ticks"] = _c64_add(
+                cnt["io_active_ticks"],
+                (pre.inflight + pre.io_ops > 0).astype(i32))
+            cnt["ticks"] = _c64_add(cnt["ticks"], jnp.ones((), i32))
             trace = c["trace"]
             if cfg.trace:
                 ti = jnp.minimum(t, TRACE_LEN - 1)
                 trace = {
-                    "io_blocks": trace["io_blocks"].at[ti].set(io_now),
+                    "io_blocks": trace["io_blocks"].at[ti].set(
+                        pre.io_blocks),
                     "lanes": trace["lanes"].at[ti].set(lanes_used),
-                    "edges": trace["edges"].at[ti].set(edges_now),
+                    "edges": trace["edges"].at[ti].set(res.edges_scanned),
                     "frontier": trace["frontier"].at[ti].set(
                         jnp.sum(front2).astype(i32)),
                 }
 
             return dict(state=state, front=front2, front_next=front_next,
                         b_state=b_state, b_issue=b_issue, b_stamp=b_stamp,
-                        b_reuse=b_reuse, b_nactive=b_nactive2,
-                        b_prio=b_prio2, used_slots=used_slots, t=t + 1,
+                        b_reuse=b_reuse, b_used=b_used,
+                        b_nactive=b_nactive2, b_prio=b_prio2,
+                        used_slots=used_slots, t=t + 1,
                         counters=cnt, trace=trace)
 
         out = jax.lax.while_loop(cond, tick, carry0)

@@ -1,0 +1,69 @@
+"""Buffer-pool tier: slot accounting for resident blocks (paper Sec. 4.2).
+
+The pool owns everything measured in 4 KB slots: admission of preload
+candidates under the capacity limit, release of slots when blocks finish
+or are evicted, and the *early-stop* reuse-eviction decision (Sec. 4.5)
+that kicks a block back to UNCACHED after it has been reactivated more
+than ``early_stop`` consecutive times.
+
+All methods are pure jnp functions of the carried ``used_slots`` scalar
+and per-block masks, so they compose inside the engine's
+``jax.lax.while_loop`` tick unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class BufferPool:
+    """Slot accounting over a fixed pool of ``slots`` 4 KB units.
+
+    ``block_io`` is the per-scheduling-block I/O cost in slots (0 for
+    memory-resident mini pseudo-blocks and tail blocks).
+    """
+
+    def __init__(self, slots: int, block_io: jnp.ndarray,
+                 early_stop: int = 0):
+        self.slots = int(slots)
+        self.block_io = block_io
+        self.early_stop = int(early_stop)
+
+    # ------------------------------------------------------------------
+    def free(self, used_slots: jnp.ndarray) -> jnp.ndarray:
+        return self.slots - used_slots
+
+    def admit(self, used_slots: jnp.ndarray, spans: jnp.ndarray,
+              want: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Greedy prefix admission of preload candidates.
+
+        ``spans[i]`` slots are granted to candidate i while the running
+        total fits in the free capacity. Returns ``(take, used_slots')``.
+        """
+        cum_sp = jnp.cumsum(spans * want)
+        take = want & (cum_sp <= self.free(used_slots))
+        return take, used_slots + jnp.sum(spans * take)
+
+    def release(self, used_slots: jnp.ndarray,
+                released: jnp.ndarray) -> jnp.ndarray:
+        """Return the slots of every block in the ``released`` mask."""
+        return used_slots - jnp.sum(self.block_io * released)
+
+    # ------------------------------------------------------------------
+    def reuse_evictions(self, b_reuse: jnp.ndarray, pulled: jnp.ndarray,
+                        reactivated: jnp.ndarray
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Early-stop reuse eviction (Sec. 4.5).
+
+        Updates the consecutive-reuse counter (incremented on
+        reactivation, reset when a pulled block exhausts its work) and
+        flags blocks whose counter exceeds the threshold for eviction.
+        Returns ``(evict, b_reuse')`` — the caller zeroes the counter of
+        evicted blocks after applying the state transition.
+        """
+        b_reuse = jnp.where(reactivated, b_reuse + 1,
+                            jnp.where(pulled, 0, b_reuse))
+        if self.early_stop > 0:
+            evict = reactivated & (b_reuse > self.early_stop)
+        else:
+            evict = jnp.zeros_like(reactivated)
+        return evict, b_reuse

@@ -1,0 +1,255 @@
+"""Scheduler tier: block-state transitions and queue policies (paper Sec. 4).
+
+This module owns the per-block control plane of the engine tick:
+
+  * async I/O completion (LOADING -> CACHED),
+  * the preload priority queue over UNCACHED blocks (top-k by worklist
+    priority, bounded by the io_uring-style queue depth; capacity
+    admission is delegated to the :class:`~repro.core.pool.BufferPool`),
+  * the cached-queue *pull* step behind a small policy protocol
+    (:class:`PullPolicy`) — ``fifo`` (paper default), ``priority``, and
+    ``lru`` are provided and new policies register via
+    :data:`CACHED_POLICIES`,
+  * finish/reactivation/eviction transitions after execution, activation
+    of newly woken blocks, and the Sec. 4.3 synchronous barrier.
+
+Everything is a pure jnp function of the carried per-block arrays so the
+whole scheduler composes inside ``jax.lax.while_loop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pool import BufferPool
+
+# persistent per-tick block states (PROCESSING/REACTIVATED are intra-tick)
+S_INACTIVE, S_UNCACHED, S_LOADING, S_CACHED = 0, 1, 2, 3
+
+NEG_INF = np.iinfo(np.int32).min // 2
+
+
+# ----------------------------------------------------------------------
+# cached-queue pull policies
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PullView:
+    """Per-block metadata a pull policy may rank on."""
+    b_stamp: jnp.ndarray   # tick the block (re)entered the cached queue
+    b_prio: jnp.ndarray    # worklist priority (max active-vertex priority)
+    b_used: jnp.ndarray    # tick the block was last pulled (0 = never)
+    t: jnp.ndarray         # current tick
+
+
+class PullPolicy:
+    """Ranks CACHED blocks for execution; higher key is pulled sooner."""
+
+    name = "base"
+
+    def key(self, ready: jnp.ndarray, view: PullView) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+class FifoPolicy(PullPolicy):
+    """Paper default: oldest cached-queue entry first."""
+
+    name = "fifo"
+
+    def key(self, ready, view):
+        return jnp.where(ready, -view.b_stamp, NEG_INF)
+
+
+class PriorityPolicy(PullPolicy):
+    """Beyond-paper: highest worklist priority first."""
+
+    name = "priority"
+
+    def key(self, ready, view):
+        return jnp.where(ready, view.b_prio, NEG_INF)
+
+
+class LruPolicy(PullPolicy):
+    """Least-recently-executed first: anti-starvation round-robin that
+    spreads executor time across the cached queue instead of letting a
+    hot reactivated block monopolize the lanes."""
+
+    name = "lru"
+
+    def key(self, ready, view):
+        return jnp.where(ready, -view.b_used, NEG_INF)
+
+
+CACHED_POLICIES: dict[str, type[PullPolicy]] = {
+    p.name: p for p in (FifoPolicy, PriorityPolicy, LruPolicy)
+}
+
+
+def make_pull_policy(name: str) -> PullPolicy:
+    try:
+        return CACHED_POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown cached_policy {name!r}; "
+            f"available: {sorted(CACHED_POLICIES)}") from None
+
+
+# ----------------------------------------------------------------------
+# scheduler
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PreloadResult:
+    b_state: jnp.ndarray
+    b_issue: jnp.ndarray
+    used_slots: jnp.ndarray
+    io_ops: jnp.ndarray      # submissions this tick (i32)
+    io_blocks: jnp.ndarray   # 4 KB blocks submitted this tick (i32)
+    inflight: jnp.ndarray    # reads in flight before this tick's submits
+
+
+@dataclasses.dataclass
+class FinishResult:
+    b_state: jnp.ndarray
+    b_stamp: jnp.ndarray
+    b_reuse: jnp.ndarray
+    used_slots: jnp.ndarray
+    blocks_reused: jnp.ndarray  # reactivated without eviction (i32)
+
+
+class Scheduler:
+    """Block-state control plane shared by every executor backend.
+
+    ``block_io`` is per-block I/O cost in 4 KB slots, ``v_sched`` maps
+    vertices to scheduling blocks, ``v_deg`` is the per-vertex degree
+    table used for worklist priorities.
+    """
+
+    def __init__(self, *, block_io: jnp.ndarray, v_sched: jnp.ndarray,
+                 v_deg: jnp.ndarray, num_blocks: int, prefetch: int,
+                 lanes: int, queue_depth: int, io_latency: int,
+                 policy: PullPolicy):
+        self.block_io = block_io
+        self.v_sched = v_sched
+        self.v_deg = v_deg
+        self.B = int(num_blocks)
+        self.P = int(prefetch)
+        self.E = int(lanes)
+        self.queue_depth = int(queue_depth)
+        self.io_latency = int(io_latency)
+        self.policy = policy
+
+    # ---- worklist metadata -------------------------------------------
+    def refresh(self, algo, state, front):
+        """Per-block active counts and priorities (worklist metadata)."""
+        v_prio = algo.priority(state, self.v_deg).astype(jnp.int32)
+        nact = jax.ops.segment_sum(front.astype(jnp.int32), self.v_sched,
+                                   num_segments=self.B)
+        prio = jax.ops.segment_max(jnp.where(front, v_prio, NEG_INF),
+                                   self.v_sched, num_segments=self.B)
+        return nact, prio
+
+    def initial_block_state(self, nact: jnp.ndarray) -> jnp.ndarray:
+        return jnp.where(nact > 0,
+                         jnp.where(self.block_io > 0, S_UNCACHED, S_CACHED),
+                         S_INACTIVE).astype(jnp.int32)
+
+    # ---- stage 1: async I/O completions ------------------------------
+    def complete_io(self, b_state, b_issue, b_stamp, t):
+        done = (b_state == S_LOADING) & (t - b_issue >= self.io_latency)
+        b_state = jnp.where(done, S_CACHED, b_state)
+        b_stamp = jnp.where(done, t, b_stamp)
+        return b_state, b_stamp
+
+    # ---- stage 2: preload priority queue -----------------------------
+    def preload(self, b_state, b_issue, b_prio, b_nactive, used_slots,
+                pool: BufferPool, t) -> PreloadResult:
+        i32 = jnp.int32
+        inflight = jnp.sum(b_state == S_LOADING)
+        want = (b_state == S_UNCACHED) & (b_nactive > 0)
+        pkey = jnp.where(want, b_prio, NEG_INF)
+        _, pidx = jax.lax.top_k(pkey, self.P)
+        pvalid = pkey[pidx] > NEG_INF
+        budget = jnp.clip(self.queue_depth - inflight, 0, self.P)
+        within = jnp.arange(self.P, dtype=i32) < budget
+        spans = self.block_io[pidx]
+        take, used_slots = pool.admit(used_slots, spans, pvalid & within)
+        b_state = b_state.at[pidx].set(
+            jnp.where(take, S_LOADING, b_state[pidx]))
+        b_issue = b_issue.at[pidx].set(jnp.where(take, t, b_issue[pidx]))
+        return PreloadResult(
+            b_state=b_state, b_issue=b_issue, used_slots=used_slots,
+            io_ops=jnp.sum(take).astype(i32),
+            io_blocks=jnp.sum(spans * take).astype(i32),
+            inflight=inflight)
+
+    # ---- stage 3: pull from the cached queue -------------------------
+    def pull(self, b_state, b_nactive, view: PullView):
+        """Select up to ``lanes`` cached blocks for execution.
+
+        Returns ``(eidx, lane_valid, b_used')`` where ``b_used`` records
+        the pull tick for the LRU policy.
+        """
+        ready = (b_state == S_CACHED) & (b_nactive > 0)
+        ekey = self.policy.key(ready, view)
+        _, eidx = jax.lax.top_k(ekey, self.E)
+        lane_valid = ekey[eidx] > NEG_INF
+        b_used = view.b_used.at[eidx].set(
+            jnp.where(lane_valid, view.t + 1, view.b_used[eidx]))
+        return eidx, lane_valid, b_used
+
+    # ---- stage 7: finish / reactivation / eviction -------------------
+    def finish(self, b_state, b_stamp, b_reuse, b_nactive2, eidx,
+               lane_valid, used_slots, pool: BufferPool, t) -> FinishResult:
+        pulled = jnp.zeros(self.B, bool).at[eidx].max(lane_valid)
+        reactivated = pulled & (b_nactive2 > 0)
+        evict, b_reuse = pool.reuse_evictions(b_reuse, pulled, reactivated)
+        finished = pulled & (b_nactive2 == 0)
+        released = (finished | evict) & (b_state == S_CACHED)
+        b_state = jnp.where(finished, S_INACTIVE, b_state)
+        b_state = jnp.where(evict, S_UNCACHED, b_state)
+        b_stamp = jnp.where(reactivated & ~evict, t, b_stamp)
+        b_reuse = jnp.where(evict, 0, b_reuse)
+        used_slots = pool.release(used_slots, released)
+        return FinishResult(
+            b_state=b_state, b_stamp=b_stamp, b_reuse=b_reuse,
+            used_slots=used_slots,
+            blocks_reused=jnp.sum(reactivated & ~evict).astype(jnp.int32))
+
+    # ---- stage 8: activation transitions for inactive blocks ---------
+    def activate(self, b_state, b_stamp, b_nactive2, t):
+        newly = (b_state == S_INACTIVE) & (b_nactive2 > 0)
+        b_state = jnp.where(newly & (self.block_io > 0), S_UNCACHED,
+                            b_state)
+        goes_cached = newly & (self.block_io == 0)
+        b_state = jnp.where(goes_cached, S_CACHED, b_state)
+        b_stamp = jnp.where(goes_cached, t, b_stamp)
+        return b_state, b_stamp
+
+    # ---- stage 9: synchronous barrier (Sec. 4.3) ---------------------
+    def barrier(self, algo, state, front2, front_next, b_state,
+                b_nactive2, b_prio2, used_slots, pool: BufferPool):
+        """Swap in the next-iteration worklist once the current one and
+        all in-flight I/O drain. Resident blocks with work stay; the rest
+        are released."""
+        inflight_now = jnp.any(b_state == S_LOADING)
+        barrier = (~jnp.any(front2)) & (~inflight_now) \
+            & jnp.any(front_next)
+        front2 = jnp.where(barrier, front_next, front2)
+        front_next = jnp.where(barrier, False, front_next)
+        nact_b, prio_b = self.refresh(algo, state, front2)
+        b_nactive2 = jnp.where(barrier, nact_b, b_nactive2)
+        b_prio2 = jnp.where(barrier, prio_b, b_prio2)
+        drop = barrier & (b_state == S_CACHED) & (b_nactive2 == 0)
+        used_slots = pool.release(used_slots, drop)
+        b_state = jnp.where(drop, S_INACTIVE, b_state)
+        wake = barrier & (b_state == S_INACTIVE) & (b_nactive2 > 0)
+        b_state = jnp.where(wake & (self.block_io > 0), S_UNCACHED,
+                            b_state)
+        b_state = jnp.where(wake & (self.block_io == 0), S_CACHED,
+                            b_state)
+        return (front2, front_next, b_state, b_nactive2, b_prio2,
+                used_slots, barrier)

@@ -1,0 +1,270 @@
+"""Unit tests for the layered engine tick: scheduler (block-state
+transitions, preload queue, pull policies), buffer pool (slot
+accounting, early-stop eviction), and executor backends — each tier
+exercised in isolation, outside the engine's while_loop."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms.bfs import bfs_algorithm
+from repro.core.engine import Engine, EngineConfig, _c64_add, _c64_int, \
+    _c64_zero
+from repro.core.pool import BufferPool
+from repro.core.scheduler import (CACHED_POLICIES, NEG_INF, S_CACHED,
+                                  S_INACTIVE, S_LOADING, S_UNCACHED,
+                                  PullView, Scheduler, make_pull_policy)
+from repro.storage.csr import from_edges
+from repro.storage.hybrid import build_hybrid
+
+I32 = jnp.int32
+
+
+def arr(vals, dtype=I32):
+    return jnp.asarray(vals, dtype=dtype)
+
+
+# ----------------------------------------------------------------------
+# 64-bit counters (uint32 limb pairs; jax_enable_x64 stays off)
+# ----------------------------------------------------------------------
+
+def test_counter_limbs_carry_past_int32():
+    c = _c64_zero()
+    big = jnp.asarray(2 ** 31 - 1, I32)  # max int32 increment
+    for _ in range(5):
+        c = _c64_add(c, big)
+    assert _c64_int(c) == 5 * (2 ** 31 - 1)  # > int32 and > uint32 range
+
+
+def test_counter_limbs_small_increments():
+    c = _c64_add(_c64_zero(), jnp.asarray(7, I32))
+    assert _c64_int(c) == 7
+
+
+# ----------------------------------------------------------------------
+# buffer pool
+# ----------------------------------------------------------------------
+
+def test_pool_admit_respects_capacity_prefix():
+    pool = BufferPool(slots=4, block_io=arr([2, 2, 2]))
+    spans = arr([2, 2, 2])
+    want = jnp.asarray([True, True, True])
+    take, used = pool.admit(jnp.zeros((), I32), spans, want)
+    # only the first two candidates fit in 4 slots
+    assert np.asarray(take).tolist() == [True, True, False]
+    assert int(used) == 4
+
+
+def test_pool_admit_skips_unwanted_candidates():
+    pool = BufferPool(slots=4, block_io=arr([1, 1, 1]))
+    take, used = pool.admit(jnp.zeros((), I32), arr([3, 3, 1]),
+                            jnp.asarray([True, False, True]))
+    assert np.asarray(take).tolist() == [True, False, True]
+    assert int(used) == 4
+
+
+def test_pool_release_returns_slots():
+    pool = BufferPool(slots=8, block_io=arr([3, 2, 1]))
+    used = pool.release(jnp.asarray(6, I32),
+                        jnp.asarray([True, False, True]))
+    assert int(used) == 2
+
+
+def test_pool_reuse_eviction_threshold():
+    pool = BufferPool(slots=8, block_io=arr([1, 1, 1]), early_stop=2)
+    b_reuse = arr([2, 2, 0])
+    pulled = jnp.asarray([True, True, True])
+    reactivated = jnp.asarray([True, False, True])
+    evict, b_reuse = pool.reuse_evictions(b_reuse, pulled, reactivated)
+    # block 0: counter 3 > 2 -> evicted; block 1 exhausted -> reset;
+    # block 2: first reactivation, counter 1
+    assert np.asarray(evict).tolist() == [True, False, False]
+    assert np.asarray(b_reuse).tolist() == [3, 0, 1]
+
+
+def test_pool_early_stop_disabled_never_evicts():
+    pool = BufferPool(slots=8, block_io=arr([1]), early_stop=0)
+    evict, _ = pool.reuse_evictions(arr([99]), jnp.asarray([True]),
+                                    jnp.asarray([True]))
+    assert not bool(evict[0])
+
+
+# ----------------------------------------------------------------------
+# scheduler
+# ----------------------------------------------------------------------
+
+def make_sched(B=4, policy="fifo", **kw):
+    defaults = dict(block_io=arr([1] * B), v_sched=arr([0]),
+                    v_deg=arr([0]), num_blocks=B, prefetch=B, lanes=2,
+                    queue_depth=8, io_latency=1)
+    defaults.update(kw)
+    return Scheduler(policy=make_pull_policy(policy), **defaults)
+
+
+def test_complete_io_after_latency():
+    sched = make_sched(io_latency=2)
+    b_state = arr([S_LOADING, S_LOADING, S_UNCACHED, S_INACTIVE])
+    b_issue = arr([0, 3, 0, 0])
+    b_state2, b_stamp = sched.complete_io(b_state, b_issue,
+                                          jnp.zeros(4, I32),
+                                          jnp.asarray(4, I32))
+    # issued at 0 completes (4-0 >= 2); issued at 3 still in flight
+    assert np.asarray(b_state2).tolist() == [S_CACHED, S_LOADING,
+                                             S_UNCACHED, S_INACTIVE]
+    assert int(b_stamp[0]) == 4
+
+
+def test_preload_picks_highest_priority_within_budget():
+    sched = make_sched(B=4, prefetch=2)
+    pool = BufferPool(slots=64, block_io=sched.block_io)
+    b_state = arr([S_UNCACHED] * 4)
+    b_prio = arr([1, 9, 5, 3])
+    pre = sched.preload(b_state, jnp.zeros(4, I32), b_prio,
+                        arr([1, 1, 1, 1]), jnp.zeros((), I32), pool,
+                        jnp.asarray(0, I32))
+    st = np.asarray(pre.b_state).tolist()
+    # top-2 by priority (blocks 1 and 2) go to LOADING
+    assert st == [S_UNCACHED, S_LOADING, S_LOADING, S_UNCACHED]
+    assert int(pre.io_ops) == 2 and int(pre.io_blocks) == 2
+    assert int(pre.used_slots) == 2
+
+
+def test_preload_honors_queue_depth():
+    sched = make_sched(B=4, prefetch=4, queue_depth=3)
+    pool = BufferPool(slots=64, block_io=sched.block_io)
+    b_state = arr([S_LOADING, S_LOADING, S_UNCACHED, S_UNCACHED])
+    pre = sched.preload(b_state, jnp.zeros(4, I32), arr([0, 0, 5, 9]),
+                        arr([0, 0, 1, 1]), jnp.asarray(2, I32), pool,
+                        jnp.asarray(0, I32))
+    # 2 in flight, depth 3 -> only one new submission (highest prio = 3)
+    assert int(pre.io_ops) == 1
+    assert np.asarray(pre.b_state).tolist()[3] == S_LOADING
+    assert int(pre.inflight) == 2
+
+
+def test_activate_routes_by_io_cost():
+    sched = make_sched(B=3, block_io=arr([1, 0, 1]))
+    b_state, b_stamp = sched.activate(
+        arr([S_INACTIVE, S_INACTIVE, S_INACTIVE]), jnp.zeros(3, I32),
+        arr([2, 2, 0]), jnp.asarray(5, I32))
+    # io>0 -> UNCACHED; io==0 (mini pseudo-block) -> CACHED, no I/O ever
+    assert np.asarray(b_state).tolist() == [S_UNCACHED, S_CACHED,
+                                            S_INACTIVE]
+    assert int(b_stamp[1]) == 5
+
+
+def test_finish_releases_exhausted_and_keeps_reactivated():
+    sched = make_sched(B=3)
+    pool = BufferPool(slots=8, block_io=sched.block_io)
+    b_state = arr([S_CACHED, S_CACHED, S_CACHED])
+    eidx = arr([0, 1])
+    lane_valid = jnp.asarray([True, True])
+    fin = sched.finish(b_state, jnp.zeros(3, I32), jnp.zeros(3, I32),
+                       arr([0, 3, 1]), eidx, lane_valid,
+                       jnp.asarray(3, I32), pool, jnp.asarray(7, I32))
+    st = np.asarray(fin.b_state).tolist()
+    # block 0 exhausted -> INACTIVE + slot released; block 1 reactivated
+    # -> stays CACHED with refreshed stamp; block 2 untouched
+    assert st == [S_INACTIVE, S_CACHED, S_CACHED]
+    assert int(fin.used_slots) == 2
+    assert int(fin.b_stamp[1]) == 7
+    assert int(fin.blocks_reused) == 1
+
+
+# ----------------------------------------------------------------------
+# pull policies
+# ----------------------------------------------------------------------
+
+def _view(stamp, prio, used, t=10):
+    return PullView(b_stamp=arr(stamp), b_prio=arr(prio),
+                    b_used=arr(used), t=jnp.asarray(t, I32))
+
+
+def test_policy_registry_complete():
+    assert set(CACHED_POLICIES) == {"fifo", "priority", "lru"}
+    with pytest.raises(ValueError, match="unknown cached_policy"):
+        make_pull_policy("belady")
+
+
+def test_fifo_pulls_oldest_stamp():
+    sched = make_sched(B=3, policy="fifo", lanes=1)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]),
+        _view([5, 2, 9], [0, 0, 0], [0, 0, 0]))
+    assert bool(lane_valid[0]) and int(eidx[0]) == 1
+
+
+def test_priority_pulls_highest_priority():
+    sched = make_sched(B=3, policy="priority", lanes=1)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]),
+        _view([5, 2, 9], [3, 8, 1], [0, 0, 0]))
+    assert bool(lane_valid[0]) and int(eidx[0]) == 1
+
+
+def test_lru_pulls_least_recently_executed_and_records_use():
+    sched = make_sched(B=3, policy="lru", lanes=1)
+    view = _view([0, 0, 0], [0, 0, 0], [4, 1, 7], t=9)
+    eidx, lane_valid, b_used = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]), view)
+    assert bool(lane_valid[0]) and int(eidx[0]) == 1
+    assert int(b_used[1]) == 10  # t + 1, so "never pulled" (0) sorts first
+
+
+def test_pull_skips_blocks_without_work():
+    sched = make_sched(B=3, policy="fifo", lanes=2)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_UNCACHED, S_CACHED]), arr([1, 1, 0]),
+        _view([0, 0, 0], [0, 0, 0], [0, 0, 0]))
+    # only block 0 is cached AND has active vertices
+    assert np.asarray(lane_valid).sum() == 1
+    assert int(eidx[np.argmax(np.asarray(lane_valid))]) == 0
+
+
+# ----------------------------------------------------------------------
+# executor backends (direct, outside the while_loop)
+# ----------------------------------------------------------------------
+
+def _line_engine(executor):
+    # path graph 0-1-2-3-4: deterministic one-hop relaxations
+    n = 5
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 4])
+    g = from_edges(n, np.r_[src, dst], np.r_[dst, src])
+    hg = build_hybrid(g, delta_deg=0, block_edges=8)
+    return Engine(hg, EngineConfig(lanes=2, chunk_size=4,
+                                   executor=executor)), hg
+
+
+@pytest.mark.parametrize("executor", ["gather", "pallas"])
+def test_executor_single_step_relax(executor):
+    eng, hg = _line_engine(executor)
+    algo = bfs_algorithm()
+    src_new = int(hg.v2id[0])
+    dis = np.full(eng.V, 2 ** 30, np.int32)
+    dis[src_new] = 0
+    front = np.zeros(eng.V, bool)
+    front[src_new] = True
+    eidx = jnp.asarray([int(eng.t_v_sched[src_new])] * eng.E, I32)
+    lane_valid = jnp.asarray([True] + [False] * (eng.E - 1))
+    res = eng.executor.execute(algo, {"dis": jnp.asarray(dis)},
+                               jnp.asarray(front), eidx, lane_valid)
+    new_dis = np.asarray(res.state["dis"])[hg.v2id]
+    assert new_dis[0] == 0 and new_dis[1] == 1  # one-hop relax
+    assert bool(res.processed[src_new])
+    assert int(res.vertices_processed) >= 1
+    assert int(res.edges_scanned) >= 1
+
+
+@pytest.mark.parametrize("executor", ["gather", "pallas"])
+def test_executor_invalid_lanes_are_noop(executor):
+    eng, hg = _line_engine(executor)
+    algo = bfs_algorithm()
+    dis = jnp.asarray(np.full(eng.V, 2 ** 30, np.int32))
+    front = jnp.zeros(eng.V, bool)
+    res = eng.executor.execute(algo, {"dis": dis}, front,
+                               jnp.zeros(eng.E, I32),
+                               jnp.zeros(eng.E, bool))
+    assert int(res.edges_scanned) == 0
+    assert int(res.vertices_processed) == 0
+    assert not bool(res.processed.any())
+    assert np.array_equal(np.asarray(res.state["dis"]), np.asarray(dis))

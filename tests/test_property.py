@@ -2,7 +2,9 @@
 accounting, hybrid-storage roundtrips, and scheduler conservation laws."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algorithms import run_bfs, run_wcc
 from repro.core.engine import Engine, EngineConfig
@@ -21,6 +23,7 @@ def random_graph(draw):
     return from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(random_graph(), st.integers(min_value=2, max_value=10),
        st.booleans())
@@ -36,6 +39,7 @@ def test_bfs_correct_on_random_graphs(g, pool, sync):
     _check_metric_invariants(m, hg)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(random_graph())
 def test_wcc_correct_on_random_graphs(g):
@@ -77,6 +81,7 @@ def test_hybrid_roundtrip_property(g, delta, block_edges):
         assert got == want
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(min_value=0, max_value=2 ** 16))
 def test_engine_deterministic(seed):
