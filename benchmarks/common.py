@@ -8,6 +8,7 @@ I/O volumes and edge counts are exact engine counters.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -27,6 +28,12 @@ RESULTS: list[dict] = []
 
 def bench_graph(scale: int = 12, avg_degree: int = 16, seed: int = 0,
                 symmetric: bool = False) -> CSRGraph:
+    # REPRO_BENCH_SCALE caps every benchmark graph — tools/bench_smoke.py
+    # uses it to turn the suite into a fast tier-1 smoke run
+    try:
+        scale = min(scale, int(os.environ["REPRO_BENCH_SCALE"]))
+    except (KeyError, ValueError):
+        pass
     g = rmat_graph(scale=scale, avg_degree=avg_degree, seed=seed)
     return symmetrize(g) if symmetric else g
 
@@ -35,13 +42,14 @@ def make_engine(g: CSRGraph, *, sync: bool = False, pool_slots: int = 64,
                 lanes: int = 4, partitioner: str = "lplf",
                 delta_deg: int = 2, block_edges: int = BLOCK_EDGES,
                 trace: bool = False, cached_policy: str = "fifo",
-                executor: str = "gather", chunk_size: int = 128):
+                executor: str = "gather", chunk_size: int = 128,
+                queue_depth: int = 16, device=None):
     hg = build_hybrid(g, delta_deg=delta_deg, partitioner=partitioner,
                       block_edges=block_edges)
-    cfg = EngineConfig(lanes=lanes, prefetch=8, queue_depth=16,
+    cfg = EngineConfig(lanes=lanes, prefetch=8, queue_depth=queue_depth,
                        pool_slots=pool_slots, chunk_size=chunk_size,
                        sync=sync, trace=trace, cached_policy=cached_policy,
-                       executor=executor)
+                       executor=executor, device=device)
     return Engine(hg, cfg), hg
 
 

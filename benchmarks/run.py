@@ -22,6 +22,7 @@ MODULES = [
     ("fig10_read_inflation", "benchmarks.bench_read_inflation"),
     ("fig11_work_inflation", "benchmarks.bench_work_inflation"),
     ("fig3_12_throughput", "benchmarks.bench_throughput"),
+    ("fig3_8_12_device_sweep", "benchmarks.bench_device_sweep"),
     ("fig13_mis", "benchmarks.bench_mis"),
     ("fig14_buffer_pool", "benchmarks.bench_buffer_pool"),
     ("fig15_degree_threshold", "benchmarks.bench_degree_threshold"),

@@ -45,7 +45,8 @@ def ppr_algorithm(alpha: float = 0.15, r_max: float = 1e-6) -> Algorithm:
 
     return Algorithm(name="ppr", key="r", combine="add", apply=apply,
                      edge_value=lambda msg: msg, activated=activated,
-                     priority=priority, on_process=on_process)
+                     priority=priority, on_process=on_process,
+                     params=(alpha, r_max))
 
 
 def _run_push(engine: Engine, hg: HybridGraph, r0: np.ndarray,

@@ -53,6 +53,11 @@ class Algorithm:
     priority: Callable[[StateT, jnp.ndarray], jnp.ndarray]
     #: optional consumption step: (state, processed bool[V']) -> state
     on_process: Callable[[StateT, jnp.ndarray], StateT] | None = None
+    #: every value the callbacks close over (e.g. PPR's alpha/r_max) must
+    #: appear here (or be folded into ``name``): the engine's compile
+    #: cache keys on ``(name, params, cfg)``, so omitting a parameter
+    #: silently reuses another instance's compiled tick
+    params: tuple = ()
 
     def neutral(self, dtype) -> jnp.ndarray:
         if self.combine == "min":

@@ -22,6 +22,13 @@ architecture (Sec. 4.1):
     ``pallas`` (the TPU-native ``frontier_relax`` kernel) produce
     identical results.
 
+I/O time is *device-model-driven* (Sec. 4.5): at submit the
+:class:`~repro.io_sim.device.DeviceModel` assigns each block a completion
+deadline proportional to its span with bounded channel parallelism, so
+bandwidth / queue-depth sweeps move the actual schedule. The default
+:class:`~repro.io_sim.device.UniformDevice` (``io_latency`` ticks per
+request) reproduces the constant-latency schedule bit-for-bit.
+
 This module is the orchestrator: it threads the carry through the tiers
 and owns only the frontier/submit step and the counters. All of the
 paper's claims that we benchmark (read/work inflation, reuse, stalls)
@@ -55,13 +62,14 @@ from repro.core.pool import BufferPool
 from repro.core.scheduler import (NEG_INF, S_CACHED, S_INACTIVE, S_LOADING,
                                   S_UNCACHED, PullView, Scheduler,
                                   make_pull_policy)
+from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.storage.hybrid import HybridGraph, mini_offset
 
 TRACE_LEN = 16384
 
 _COUNTERS = ("io_ops", "io_blocks", "edges_scanned", "vertices_processed",
              "reuse_activations", "blocks_reused", "exec_idle_ticks",
-             "io_active_ticks", "barriers", "ticks")
+             "io_active_ticks", "inflight_ticks", "barriers", "ticks")
 
 
 # ---- 64-bit counters as uint32 limb pairs ----------------------------
@@ -93,7 +101,10 @@ class EngineConfig:
     executor: str = "gather"    # 'gather' | 'pallas' (frontier_relax kernel)
     sync: bool = False          # Sec. 4.3 synchronous special case
     early_stop: int = 0         # consecutive-reuse eviction threshold (0=off)
-    io_latency: int = 1         # ticks from submit to completion
+    io_latency: int = 1         # uniform-device ticks (used iff device=None)
+    device: DeviceModel | None = None  # span-proportional device time;
+    #                             None = UniformDevice(io_latency), which
+    #                             reproduces the pre-device schedule
     max_ticks: int = 200_000
     trace: bool = False         # record per-tick pipeline occupancy
 
@@ -110,6 +121,9 @@ class Metrics:
     blocks_reused: int          # reactivated blocks re-run without I/O
     exec_idle_ticks: int        # ticks with work pending but no cached block
     io_active_ticks: int        # ticks with reads in flight
+    inflight_ticks: int         # sum over ticks of in-flight reads (the
+    #                             occupancy integral: /io_active_ticks =
+    #                             mean queue depth while I/O is active)
     barriers: int               # sync-mode iterations
     ticks: int
 
@@ -136,11 +150,13 @@ class Engine:
         self._build_tables()
         self.pool = BufferPool(self.pool_slots, self.t_sched_io,
                                early_stop=cfg.early_stop)
+        self.device = cfg.device if cfg.device is not None \
+            else UniformDevice(latency=cfg.io_latency)
         self.scheduler = Scheduler(
             block_io=self.t_sched_io, v_sched=self.t_v_sched,
             v_deg=self.t_v_deg, num_blocks=self.B, prefetch=self.P,
             lanes=self.E, queue_depth=cfg.queue_depth,
-            io_latency=cfg.io_latency,
+            device=self.device,
             policy=make_pull_policy(cfg.cached_policy))
         self.executor = make_executor(cfg.executor, ExecTables(
             all_edges=self.t_all_edges, v_start=self.t_v_start,
@@ -231,7 +247,11 @@ class Engine:
         front0 = jnp.asarray(np.asarray(init_frontier, dtype=bool)
                              & np.asarray(self.t_is_real))
         state0 = {k: jnp.asarray(v) for k, v in init_state.items()}
-        key = (algo.name, cfg)
+        # two ppr_algorithm() closures with different alpha/r_max share a
+        # name but must not share a compiled tick — Algorithm.params folds
+        # the closed-over values into the key while still letting repeated
+        # runs of an equal-parameter algorithm reuse the compilation
+        key = (algo.name, algo.params, cfg)
         if key not in self._compiled:
             self._compiled[key] = jax.jit(
                 functools.partial(self._run_impl, algo))
@@ -255,14 +275,15 @@ class Engine:
         b_state0 = sched.initial_block_state(nact0)
         counters0 = {k: _c64_zero() for k in _COUNTERS}
         trace0 = {k: jnp.zeros(TRACE_LEN, i32)
-                  for k in ("io_blocks", "lanes", "edges", "frontier")} \
+                  for k in ("io_blocks", "lanes", "edges", "frontier",
+                            "inflight", "io_active", "used_slots")} \
             if cfg.trace else {}
 
         carry0 = dict(
             state=state0, front=front0,
             front_next=jnp.zeros_like(front0),
             b_state=b_state0,
-            b_issue=jnp.zeros(B, i32), b_stamp=jnp.zeros(B, i32),
+            b_deadline=jnp.zeros(B, i32), b_stamp=jnp.zeros(B, i32),
             b_reuse=jnp.zeros(B, i32), b_used=jnp.zeros(B, i32),
             b_nactive=nact0, b_prio=prio0,
             used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
@@ -281,14 +302,15 @@ class Engine:
             t = c["t"]
             cnt = dict(c["counters"])
 
-            # ---- 1. async I/O completions -----------------------------
-            b_state, b_stamp = sched.complete_io(c["b_state"], c["b_issue"],
-                                                 c["b_stamp"], t)
+            # ---- 1. async I/O completions (against device deadlines) ---
+            comp = sched.complete_io(c["b_state"], c["b_deadline"],
+                                     c["b_stamp"], t)
+            b_state, b_stamp = comp.b_state, comp.b_stamp
 
             # ---- 2. preload: priority queue over uncached blocks -------
-            pre = sched.preload(b_state, c["b_issue"], b_prio, b_nactive,
+            pre = sched.preload(b_state, c["b_deadline"], b_prio, b_nactive,
                                 c["used_slots"], pool, t)
-            b_state, b_issue = pre.b_state, pre.b_issue
+            b_state, b_deadline = pre.b_state, pre.b_deadline
             used_slots = pre.used_slots
             cnt["io_ops"] = _c64_add(cnt["io_ops"], pre.io_ops)
             cnt["io_blocks"] = _c64_add(cnt["io_blocks"], pre.io_blocks)
@@ -350,9 +372,16 @@ class Engine:
             cnt["exec_idle_ticks"] = _c64_add(
                 cnt["exec_idle_ticks"],
                 ((lanes_used == 0) & jnp.any(front2)).astype(i32))
-            cnt["io_active_ticks"] = _c64_add(
-                cnt["io_active_ticks"],
-                (pre.inflight + pre.io_ops > 0).astype(i32))
+            # io_active samples in-flight BEFORE completions so a tick
+            # whose last read retires still counts; the occupancy
+            # *integral* uses the post-completion count + submissions,
+            # which never double-counts a completion/submit handoff and
+            # is bounded by queue_depth
+            io_active = (comp.inflight + pre.io_ops > 0).astype(i32)
+            occ = pre.inflight + pre.io_ops
+            cnt["io_active_ticks"] = _c64_add(cnt["io_active_ticks"],
+                                              io_active)
+            cnt["inflight_ticks"] = _c64_add(cnt["inflight_ticks"], occ)
             cnt["ticks"] = _c64_add(cnt["ticks"], jnp.ones((), i32))
             trace = c["trace"]
             if cfg.trace:
@@ -364,10 +393,15 @@ class Engine:
                     "edges": trace["edges"].at[ti].set(res.edges_scanned),
                     "frontier": trace["frontier"].at[ti].set(
                         jnp.sum(front2).astype(i32)),
+                    "inflight": trace["inflight"].at[ti].set(occ),
+                    "io_active": trace["io_active"].at[ti].set(io_active),
+                    "used_slots": trace["used_slots"].at[ti].set(
+                        used_slots),
                 }
 
             return dict(state=state, front=front2, front_next=front_next,
-                        b_state=b_state, b_issue=b_issue, b_stamp=b_stamp,
+                        b_state=b_state, b_deadline=b_deadline,
+                        b_stamp=b_stamp,
                         b_reuse=b_reuse, b_used=b_used,
                         b_nactive=b_nactive2, b_prio=b_prio2,
                         used_slots=used_slots, t=t + 1,

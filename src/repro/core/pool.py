@@ -13,6 +13,7 @@ and per-block masks, so they compose inside the engine's
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 class BufferPool:
@@ -31,6 +32,13 @@ class BufferPool:
     # ------------------------------------------------------------------
     def free(self, used_slots: jnp.ndarray) -> jnp.ndarray:
         return self.slots - used_slots
+
+    def in_bounds(self, used_slots) -> bool:
+        """Capacity invariant: 0 <= used_slots <= slots. Admission and
+        release must preserve this on every tick; the property suite
+        checks it against the engine's ``used_slots`` trace."""
+        u = np.asarray(used_slots)
+        return bool(((u >= 0) & (u <= self.slots)).all())
 
     def admit(self, used_slots: jnp.ndarray, spans: jnp.ndarray,
               want: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

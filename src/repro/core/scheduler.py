@@ -2,7 +2,12 @@
 
 This module owns the per-block control plane of the engine tick:
 
-  * async I/O completion (LOADING -> CACHED),
+  * async I/O completion (LOADING -> CACHED) against per-block
+    **deadlines** assigned at submit time by the
+    :class:`~repro.io_sim.device.DeviceModel` — service time is
+    span-proportional with bounded channel parallelism, so slow devices
+    and shallow queues visibly stretch the schedule (paper Figs. 3, 8,
+    12),
   * the preload priority queue over UNCACHED blocks (top-k by worklist
     priority, bounded by the io_uring-style queue depth; capacity
     admission is delegated to the :class:`~repro.core.pool.BufferPool`),
@@ -25,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pool import BufferPool
+from repro.io_sim.device import DeviceModel
 
 # persistent per-tick block states (PROCESSING/REACTIVATED are intra-tick)
 S_INACTIVE, S_UNCACHED, S_LOADING, S_CACHED = 0, 1, 2, 3
@@ -102,13 +108,25 @@ def make_pull_policy(name: str) -> PullPolicy:
 # ----------------------------------------------------------------------
 
 @dataclasses.dataclass
+class CompletionResult:
+    b_state: jnp.ndarray
+    b_stamp: jnp.ndarray
+    inflight: jnp.ndarray    # reads in flight BEFORE completions (i32):
+    #                          a tick whose last read completes here was
+    #                          still I/O-active, so occupancy accounting
+    #                          must sample this, not the post-completion
+    #                          count
+
+
+@dataclasses.dataclass
 class PreloadResult:
     b_state: jnp.ndarray
-    b_issue: jnp.ndarray
+    b_deadline: jnp.ndarray  # per-block completion deadline (device time)
     used_slots: jnp.ndarray
     io_ops: jnp.ndarray      # submissions this tick (i32)
     io_blocks: jnp.ndarray   # 4 KB blocks submitted this tick (i32)
     inflight: jnp.ndarray    # reads in flight before this tick's submits
+    #                          (post-completion: the queue-depth budget)
 
 
 @dataclasses.dataclass
@@ -125,12 +143,14 @@ class Scheduler:
 
     ``block_io`` is per-block I/O cost in 4 KB slots, ``v_sched`` maps
     vertices to scheduling blocks, ``v_deg`` is the per-vertex degree
-    table used for worklist priorities.
+    table used for worklist priorities. ``device`` assigns every
+    submitted block a completion deadline from its span and the queue
+    depth (:class:`~repro.io_sim.device.DeviceModel`).
     """
 
     def __init__(self, *, block_io: jnp.ndarray, v_sched: jnp.ndarray,
                  v_deg: jnp.ndarray, num_blocks: int, prefetch: int,
-                 lanes: int, queue_depth: int, io_latency: int,
+                 lanes: int, queue_depth: int, device: DeviceModel,
                  policy: PullPolicy):
         self.block_io = block_io
         self.v_sched = v_sched
@@ -139,7 +159,7 @@ class Scheduler:
         self.P = int(prefetch)
         self.E = int(lanes)
         self.queue_depth = int(queue_depth)
-        self.io_latency = int(io_latency)
+        self.device = device
         self.policy = policy
 
     # ---- worklist metadata -------------------------------------------
@@ -158,14 +178,18 @@ class Scheduler:
                          S_INACTIVE).astype(jnp.int32)
 
     # ---- stage 1: async I/O completions ------------------------------
-    def complete_io(self, b_state, b_issue, b_stamp, t):
-        done = (b_state == S_LOADING) & (t - b_issue >= self.io_latency)
+    def complete_io(self, b_state, b_deadline, b_stamp,
+                    t) -> CompletionResult:
+        """Retire LOADING blocks whose device deadline has passed."""
+        inflight = jnp.sum(b_state == S_LOADING).astype(jnp.int32)
+        done = (b_state == S_LOADING) & (t >= b_deadline)
         b_state = jnp.where(done, S_CACHED, b_state)
         b_stamp = jnp.where(done, t, b_stamp)
-        return b_state, b_stamp
+        return CompletionResult(b_state=b_state, b_stamp=b_stamp,
+                                inflight=inflight)
 
     # ---- stage 2: preload priority queue -----------------------------
-    def preload(self, b_state, b_issue, b_prio, b_nactive, used_slots,
+    def preload(self, b_state, b_deadline, b_prio, b_nactive, used_slots,
                 pool: BufferPool, t) -> PreloadResult:
         i32 = jnp.int32
         inflight = jnp.sum(b_state == S_LOADING)
@@ -179,9 +203,11 @@ class Scheduler:
         take, used_slots = pool.admit(used_slots, spans, pvalid & within)
         b_state = b_state.at[pidx].set(
             jnp.where(take, S_LOADING, b_state[pidx]))
-        b_issue = b_issue.at[pidx].set(jnp.where(take, t, b_issue[pidx]))
+        lat = self.device.latency_ticks(spans, self.queue_depth)
+        b_deadline = b_deadline.at[pidx].set(
+            jnp.where(take, t + lat, b_deadline[pidx]))
         return PreloadResult(
-            b_state=b_state, b_issue=b_issue, used_slots=used_slots,
+            b_state=b_state, b_deadline=b_deadline, used_slots=used_slots,
             io_ops=jnp.sum(take).astype(i32),
             io_blocks=jnp.sum(spans * take).astype(i32),
             inflight=inflight)

@@ -1,4 +1,5 @@
-from repro.io_sim.ssd_model import SSDModel
 from repro.io_sim.aio import AsyncLoader
+from repro.io_sim.device import DeviceModel, UniformDevice
+from repro.io_sim.ssd_model import SSDModel
 
-__all__ = ["SSDModel", "AsyncLoader"]
+__all__ = ["AsyncLoader", "DeviceModel", "SSDModel", "UniformDevice"]

@@ -1,0 +1,93 @@
+"""Device-time model that *drives* the engine's I/O schedule (Sec. 4.5).
+
+Until PR 2 every block read completed a constant ``io_latency`` ticks
+after submission, so queue-depth / bandwidth sweeps (paper Figs. 3, 8,
+12) could not move the schedule — the SSD model was a post-hoc analytic
+converter. This module puts the device *inside* the tick: at submit time
+the scheduler asks the device for a per-block service time and carries a
+completion **deadline** instead of an issue stamp.
+
+:class:`DeviceModel` charges span-proportional service with bounded
+channel parallelism (GraphMP / DFOGraph model transfer time per
+partition, not per request)::
+
+    latency(span) = ceil(span * ticks_per_slot / channels)
+
+where ``channels`` is capped by the engine's ``queue_depth`` — a device
+cannot expose more parallelism than the submission queue sustains.
+Deliberate simplification: channel parallelism divides each request's
+service time independently (striping within a request), so N concurrent
+reads are *not* contending for an aggregate slots/tick budget — deep
+queues model faster per-request service rather than queueing delay. An
+aggregate-bandwidth device (shared service budget across in-flight
+reads) is a ROADMAP follow-on; it needs per-tick service allocation
+carried through the while_loop.
+:class:`UniformDevice` is the degenerate constant-latency device that
+reproduces the pre-PR-2 schedule bit-for-bit (``EngineConfig.io_latency``
+maps onto it when no explicit device is configured).
+
+Both classes are frozen dataclasses so an :class:`~repro.core.engine.
+EngineConfig` embedding one stays hashable (the engine's compile cache
+keys on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Span-proportional service time with bounded channel parallelism.
+
+    ``ticks_per_slot`` is the service cost of one 4 KB slot on a single
+    channel (higher = slower device); ``channels`` is the device-side
+    parallelism (0 = derive from the engine's ``queue_depth``).
+    """
+
+    ticks_per_slot: int = 1
+    channels: int = 0
+
+    def effective_channels(self, queue_depth: int) -> int:
+        ch = self.channels if self.channels > 0 else queue_depth
+        return max(1, min(ch, queue_depth))
+
+    def latency_ticks(self, spans: jnp.ndarray,
+                      queue_depth: int) -> jnp.ndarray:
+        """Per-block ticks from submit to completion (int32, >= 1)."""
+        ch = self.effective_channels(queue_depth)
+        lat = (spans * self.ticks_per_slot + (ch - 1)) // ch
+        return jnp.maximum(lat, 1)
+
+    @classmethod
+    def from_bandwidth(cls, bandwidth_gbps: float,
+                       reference_gbps: float = 6.0,
+                       channels: int = 0) -> "DeviceModel":
+        """Map a device bandwidth onto the tick domain.
+
+        The reference device (the paper's 6 GB/s PCIe SSD) services one
+        4 KB slot per tick per channel; slower devices scale
+        ``ticks_per_slot`` up proportionally. Tick time is integral, so
+        the mapping quantizes to the nearest whole ``ticks_per_slot``
+        and every bandwidth at or above the reference collapses to
+        1 slot/tick — the scheduled device agrees with
+        :class:`~repro.io_sim.ssd_model.SSDModel`'s continuous bandwidth
+        only up to this quantization.
+        """
+        tps = max(1, round(reference_gbps / max(bandwidth_gbps, 1e-9)))
+        return cls(ticks_per_slot=tps, channels=channels)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformDevice(DeviceModel):
+    """Constant per-request latency regardless of span — the pre-PR-2
+    completion rule (``t - b_issue >= io_latency``), kept as the default
+    so existing configs stay bit-identical."""
+
+    latency: int = 1
+
+    def latency_ticks(self, spans: jnp.ndarray,
+                      queue_depth: int) -> jnp.ndarray:
+        del queue_depth
+        return jnp.full_like(spans, self.latency)

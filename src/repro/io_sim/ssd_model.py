@@ -1,24 +1,39 @@
-"""SSD performance model used to convert engine counters into modeled
+"""SSD performance model converting engine counters into modeled
 wall-clock / throughput figures (paper Figs. 3, 8, 12).
 
 The container has no SSD under test; the paper's evaluation device is a
 1 TB PCIe SSD with ~6.0 GB/s sequential bandwidth and near-uniform 4 KB
-random-read performance (Sec. 2.1, Sec. 6.3). We model:
+random-read performance (Sec. 2.1, Sec. 6.3). Since PR 2 the device
+model is no longer a post-hoc converter: the schedule itself is driven
+by :class:`~repro.io_sim.device.DeviceModel` (span-proportional
+completion deadlines inside the engine tick), and this class *consumes*
+the measured pipeline-overlap counters that schedule produces:
 
   * per-4KB-block service time  = 4096 / bandwidth (device saturated)
-  * a submission pipeline of ``queue_depth`` parallel in-flight reads
+  * overlap between I/O and compute taken from ``io_active_ticks`` /
+    ``inflight_ticks`` (measured occupancy, not re-derived max())
   * compute time per edge from a calibrated edges/s rate per executor lane
 
-Modeled time = max(io_time, compute_time) when pipelined (the engine
-overlaps them — Sec. 4.5 Preload), plus the engine's measured idle ticks
-(stall model). This is an analytic model, clearly labeled as such in
-EXPERIMENTS.md; the I/O *volumes* it consumes are exact engine counts.
+Modeled time = io + compute - hidden, where hidden is the measured
+overlap fraction applied to the smaller phase, plus the engine's measured
+idle ticks (stall model). This is an analytic model, clearly labeled as
+such in EXPERIMENTS.md; the I/O *volumes* and occupancy it consumes are
+exact engine counts.
+
+Use :meth:`SSDModel.device` to obtain the tick-domain
+:class:`~repro.io_sim.device.DeviceModel` for this SSD and pass it to
+``EngineConfig(device=...)`` so the modeled device and the scheduled
+device agree.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
-from repro.core.engine import Metrics
+from repro.io_sim.device import DeviceModel
+
+if TYPE_CHECKING:  # annotation-only: avoids the engine<->io_sim cycle
+    from repro.core.engine import Metrics
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,19 +43,45 @@ class SSDModel:
     edges_per_sec_per_lane: float = 2e8  # calibrated CPU relax rate
     lanes: int = 4
 
+    def device(self, channels: int = 0) -> DeviceModel:
+        """Tick-domain device driving the engine schedule for this SSD
+        (6 GB/s reference = 1 slot/tick/channel; quantized to whole
+        ticks, see :meth:`DeviceModel.from_bandwidth` — exact only at
+        integral slowdown factors of the reference)."""
+        return DeviceModel.from_bandwidth(self.bandwidth_gbps,
+                                          channels=channels)
+
     def io_seconds(self, m: Metrics) -> float:
         return m.io_bytes / (self.bandwidth_gbps * 1e9)
 
     def compute_seconds(self, m: Metrics) -> float:
         return m.edges_scanned / (self.edges_per_sec_per_lane * self.lanes)
 
+    def overlap_fraction(self, m: Metrics) -> float:
+        """Measured share of the schedule during which the *smaller*
+        phase hides behind the larger one. I/O-bound runs hide compute
+        while reads are in flight (``io_active_ticks / ticks``);
+        compute-bound runs hide I/O while the executor is busy
+        (``(ticks - exec_idle_ticks) / ticks``)."""
+        t = max(m.ticks, 1)
+        if self.io_seconds(m) >= self.compute_seconds(m):
+            return m.io_active_ticks / t
+        return (t - min(m.exec_idle_ticks, t)) / t
+
+    def queue_occupancy(self, m: Metrics) -> float:
+        """Mean in-flight reads while I/O is active (measured queue
+        depth; grows with ``EngineConfig.queue_depth`` until the device
+        or the worklist saturates)."""
+        return m.inflight_ticks / max(m.io_active_ticks, 1)
+
     def modeled_runtime(self, m: Metrics) -> float:
-        """Pipelined runtime: overlap I/O & compute; add measured stalls."""
-        pipelined = max(self.io_seconds(m), self.compute_seconds(m))
+        """Pipelined runtime from *measured* overlap + measured stalls."""
+        io, comp = self.io_seconds(m), self.compute_seconds(m)
+        hidden = self.overlap_fraction(m) * min(io, comp)
         # each executor-idle tick stalls the pipeline for one block service
         stall = m.exec_idle_ticks * (self.block_bytes
                                      / (self.bandwidth_gbps * 1e9))
-        return pipelined + stall
+        return io + comp - hidden + stall
 
     def effective_throughput_gbps(self, m: Metrics) -> float:
         rt = self.modeled_runtime(m)

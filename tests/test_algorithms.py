@@ -76,6 +76,35 @@ def test_ppr_matches_oracle():
     np.testing.assert_allclose(p, p_want, atol=5e-3)
 
 
+def test_ppr_two_alphas_one_engine():
+    """Regression (compile-cache aliasing): the cache must key on the
+    Algorithm *instance*, not its name — two ppr_algorithm() configs run
+    on one Engine used to silently reuse the first compiled closure and
+    return the first alpha's estimates for both."""
+    g = small_graph(n=200, m=1600, seed=4)
+    eng, hg = make_engine(g)
+    r_max = 1e-4
+    r0 = np.zeros(g.num_vertices)
+    r0[5] = 1.0
+    for alpha in (0.15, 0.6):
+        p, _ = run_ppr(eng, hg, source=5, alpha=alpha, r_max=r_max)
+        p_want, _ = oracle_ppr(g, r0, alpha, r_max)
+        np.testing.assert_allclose(p, p_want, atol=5e-3)
+    assert len(eng._compiled) == 2
+
+
+def test_compile_cache_reuses_equal_params():
+    """Repeated runs of an equal-parameter algorithm on one engine must
+    hit the compile cache (no per-call re-jit / unbounded growth)."""
+    g = small_graph(n=100, m=500, seed=11)
+    eng, hg = make_engine(g)
+    for _ in range(3):
+        run_bfs(eng, hg, 0)
+    for _ in range(2):
+        run_ppr(eng, hg, source=0, alpha=0.15, r_max=1e-4)
+    assert len(eng._compiled) == 2  # one bfs entry + one ppr entry
+
+
 def test_pagerank_converges():
     g = small_graph(n=150, m=1200, seed=5)
     eng, hg = make_engine(g)

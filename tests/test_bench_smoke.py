@@ -1,0 +1,25 @@
+"""Tier-1 perf smoke: tools/bench_smoke.py runs a tiny-graph benchmark
+subset and leaves a BENCH_smoke.json perf-trajectory point."""
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_bench_smoke_writes_trajectory_point():
+    out = ROOT / "BENCH_smoke.json"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "bench_smoke.py"), str(out)],
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["failures"] == 0
+    names = {r["name"] for r in data["results"]}
+    assert any(n.startswith("fig10_") for n in names)
+    assert any(n.startswith("device_tps") for n in names)
+    # device-sweep acceptance: occupancy monotone in queue_depth
+    mono = [r for r in data["results"]
+            if r["name"].startswith("device_occ_monotone")]
+    assert mono and all(r["derived"] == "ok" for r in mono)

@@ -12,7 +12,7 @@ def _metrics(**kw):
     base = dict(io_ops=10, io_blocks=100, edges_scanned=1000,
                 vertices_processed=50, reuse_activations=5,
                 blocks_reused=2, exec_idle_ticks=0, io_active_ticks=8,
-                barriers=0, ticks=10)
+                inflight_ticks=16, barriers=0, ticks=10)
     base.update(kw)
     return Metrics(**base)
 

@@ -13,6 +13,7 @@ from repro.core.pool import BufferPool
 from repro.core.scheduler import (CACHED_POLICIES, NEG_INF, S_CACHED,
                                   S_INACTIVE, S_LOADING, S_UNCACHED,
                                   PullView, Scheduler, make_pull_policy)
+from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.storage.csr import from_edges
 from repro.storage.hybrid import build_hybrid
 
@@ -95,22 +96,23 @@ def test_pool_early_stop_disabled_never_evicts():
 def make_sched(B=4, policy="fifo", **kw):
     defaults = dict(block_io=arr([1] * B), v_sched=arr([0]),
                     v_deg=arr([0]), num_blocks=B, prefetch=B, lanes=2,
-                    queue_depth=8, io_latency=1)
+                    queue_depth=8, device=UniformDevice(latency=1))
     defaults.update(kw)
     return Scheduler(policy=make_pull_policy(policy), **defaults)
 
 
-def test_complete_io_after_latency():
-    sched = make_sched(io_latency=2)
+def test_complete_io_after_deadline():
+    sched = make_sched(device=UniformDevice(latency=2))
     b_state = arr([S_LOADING, S_LOADING, S_UNCACHED, S_INACTIVE])
-    b_issue = arr([0, 3, 0, 0])
-    b_state2, b_stamp = sched.complete_io(b_state, b_issue,
-                                          jnp.zeros(4, I32),
-                                          jnp.asarray(4, I32))
-    # issued at 0 completes (4-0 >= 2); issued at 3 still in flight
-    assert np.asarray(b_state2).tolist() == [S_CACHED, S_LOADING,
-                                             S_UNCACHED, S_INACTIVE]
-    assert int(b_stamp[0]) == 4
+    b_deadline = arr([2, 5, 0, 0])  # issued at 0 and 3, latency 2
+    comp = sched.complete_io(b_state, b_deadline, jnp.zeros(4, I32),
+                             jnp.asarray(4, I32))
+    # deadline 2 <= 4 completes; deadline 5 still in flight
+    assert np.asarray(comp.b_state).tolist() == [S_CACHED, S_LOADING,
+                                                 S_UNCACHED, S_INACTIVE]
+    assert int(comp.b_stamp[0]) == 4
+    # occupancy is sampled BEFORE completions: both reads were in flight
+    assert int(comp.inflight) == 2
 
 
 def test_preload_picks_highest_priority_within_budget():
@@ -218,6 +220,59 @@ def test_pull_skips_blocks_without_work():
     # only block 0 is cached AND has active vertices
     assert np.asarray(lane_valid).sum() == 1
     assert int(eidx[np.argmax(np.asarray(lane_valid))]) == 0
+
+
+# ----------------------------------------------------------------------
+# device models (span-proportional service time)
+# ----------------------------------------------------------------------
+
+def test_uniform_device_constant_latency():
+    lat = UniformDevice(latency=3).latency_ticks(arr([1, 4, 16]),
+                                                 queue_depth=8)
+    assert np.asarray(lat).tolist() == [3, 3, 3]
+
+
+def test_device_model_span_proportional():
+    lat = DeviceModel(ticks_per_slot=2, channels=1).latency_ticks(
+        arr([1, 4, 16]), queue_depth=8)
+    assert np.asarray(lat).tolist() == [2, 8, 32]
+
+
+def test_device_model_channels_bounded_by_queue_depth():
+    # 16 device channels but queue_depth 4 -> effective parallelism 4
+    lat = DeviceModel(ticks_per_slot=1, channels=16).latency_ticks(
+        arr([16]), queue_depth=4)
+    assert int(lat[0]) == 4
+    # channels=0 derives parallelism from queue_depth
+    lat0 = DeviceModel(ticks_per_slot=1).latency_ticks(arr([16]),
+                                                       queue_depth=8)
+    assert int(lat0[0]) == 2
+    # latency never drops below one tick
+    assert int(DeviceModel().latency_ticks(arr([1]), queue_depth=64)[0]) == 1
+
+
+def test_device_model_from_bandwidth():
+    assert DeviceModel.from_bandwidth(6.0).ticks_per_slot == 1
+    assert DeviceModel.from_bandwidth(1.5).ticks_per_slot == 4
+    assert DeviceModel.from_bandwidth(100.0).ticks_per_slot == 1
+
+
+def test_preload_sets_span_deadlines():
+    sched = make_sched(B=3, block_io=arr([2, 8, 1]),
+                       device=DeviceModel(ticks_per_slot=2, channels=1))
+    pool = BufferPool(slots=64, block_io=sched.block_io)
+    pre = sched.preload(arr([S_UNCACHED] * 3), jnp.zeros(3, I32),
+                        arr([3, 2, 1]), arr([1, 1, 1]),
+                        jnp.zeros((), I32), pool, jnp.asarray(10, I32))
+    # deadline = t + span * ticks_per_slot on a single channel
+    assert np.asarray(pre.b_deadline).tolist() == [14, 26, 12]
+
+
+def test_pool_in_bounds_invariant():
+    pool = BufferPool(slots=8, block_io=arr([1]))
+    assert pool.in_bounds(np.asarray([0, 4, 8]))
+    assert not pool.in_bounds(np.asarray([9]))
+    assert not pool.in_bounds(np.asarray([-1]))
 
 
 # ----------------------------------------------------------------------

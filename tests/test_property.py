@@ -7,6 +7,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algorithms import run_bfs, run_wcc
+from repro.algorithms.bfs import bfs_algorithm
+from repro.algorithms.wcc import wcc_algorithm
 from repro.core.engine import Engine, EngineConfig
 from repro.storage.csr import from_edges, symmetrize
 from repro.storage.hybrid import build_hybrid
@@ -62,6 +64,39 @@ def _check_metric_invariants(m, hg):
     # edges scanned can exceed |E| (reactivation) but not absurdly
     assert m.edges_scanned <= 50 * max(hg.orig_num_edges, 1)
     assert m.io_active_ticks <= m.ticks
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(random_graph(), st.sampled_from(["bfs", "wcc"]), st.booleans(),
+       st.sampled_from([0, 1, 2]), st.sampled_from([4, 8, 16]))
+def test_used_slots_within_pool_bounds(g, algo, sync, early_stop, pool):
+    """Buffer-pool invariant: the engine's per-tick ``used_slots`` stays
+    within [0, pool_slots] for random BFS/WCC runs, sync and async,
+    including early-stop reuse evictions (trace-verified)."""
+    if algo == "wcc":
+        g = symmetrize(g)
+    hg = build_hybrid(g, delta_deg=2, block_edges=32)
+    eng = Engine(hg, EngineConfig(lanes=2, prefetch=3, queue_depth=4,
+                                  pool_slots=pool, chunk_size=16,
+                                  sync=sync, early_stop=early_stop,
+                                  trace=True))
+    if algo == "bfs":
+        init = np.full(eng.V, 2 ** 30, np.int32)
+        init[int(hg.v2id[0])] = 0
+        front0 = np.zeros(eng.V, bool)
+        front0[int(hg.v2id[0])] = True
+        _, m, trace = eng.run(bfs_algorithm(), front0, {"dis": init})
+    else:
+        front0 = np.ones(eng.V, bool)
+        _, m, trace = eng.run(wcc_algorithm(), front0,
+                              {"label": np.arange(eng.V, dtype=np.int32)})
+    used = trace["used_slots"]
+    assert len(used) == min(m.ticks, 16384) and m.ticks >= 1
+    # pool_slots may be raised to the widest block span at build time
+    assert eng.pool.slots == eng.pool_slots
+    assert eng.pool.in_bounds(used), \
+        f"used_slots out of [0, {eng.pool.slots}]: {used.min()}..{used.max()}"
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,38 @@
+#!/usr/bin/env python
+"""Fast perf-trajectory smoke point for tier-1 CI.
+
+Runs a tiny-graph subset of the benchmark suite (Fig. 10 read inflation
++ the device sweep) and writes ``BENCH_smoke.json`` at the repo root, so
+every PR commits one perf trajectory point instead of an empty history.
+Wired into tier-1 as a non-slow test via ``tests/test_bench_smoke.py``.
+
+Usage: python tools/bench_smoke.py [OUT.json]
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+# must be set before the benchmark modules are imported; assigned
+# unconditionally so an ambient REPRO_BENCH_SCALE from a local
+# benchmarking session cannot defeat the tier-1 fast path
+os.environ["REPRO_BENCH_SCALE"] = "8"
+os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))          # benchmarks package
+sys.path.insert(0, str(ROOT / "src"))  # repro package
+
+
+def main() -> None:
+    from benchmarks.run import main as bench_main
+    out = sys.argv[1] if len(sys.argv) > 1 \
+        else str(ROOT / "BENCH_smoke.json")
+    sys.argv = ["bench_smoke", "--only", "fig10,device_sweep",
+                "--json", out]
+    bench_main()
+
+
+if __name__ == "__main__":
+    main()
