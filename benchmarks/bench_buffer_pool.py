@@ -4,23 +4,21 @@ threshold.
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd
-from repro.algorithms import run_bfs, run_wcc
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import BFS, WCC
 
 
 def main() -> None:
-    model = ssd()
-    for name, fn, sym in (("bfs", lambda e, h: run_bfs(e, h, 0), False),
-                          ("wcc", run_wcc, True)):
+    for name, query, sym in (("bfs", BFS(0), False),
+                             ("wcc", WCC(), True)):
         g = bench_graph(scale=12, symmetric=sym)
+        n_blocks = make_session(g).hg.num_blocks
         for frac in (0.01, 0.02, 0.04, 0.08, 0.16):
-            eng, hg = make_engine(g, pool_slots=0, trace=False)
-            slots = max(4, int(hg.num_blocks * frac))
-            eng2, hg2 = make_engine(g, pool_slots=slots)
-            _, m = fn(eng2, hg2)
+            slots = max(4, int(n_blocks * frac))
+            res = make_session(g, pool_slots=slots).run(query)
             emit(f"fig14_{name}_buf{int(frac*100):02d}pct", 0.0,
-                 f"modeled_{model.modeled_runtime(m)*1e3:.2f}ms_io_"
-                 f"{m.io_blocks}blk")
+                 f"modeled_{res.modeled_runtime*1e3:.2f}ms_io_"
+                 f"{res.metrics.io_blocks}blk")
 
 
 if __name__ == "__main__":

@@ -18,8 +18,8 @@ import collections
 
 import numpy as np
 
-from benchmarks.common import bench_graph, emit, make_engine
-from repro.algorithms import run_bfs, run_wcc
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import BFS, WCC
 
 
 def sync_block_trace(hg, levels, v_sched, n_blocks):
@@ -76,14 +76,11 @@ def pull_policy_sweep() -> None:
     """Engine cached-queue policy sweep: measured I/O + ticks per policy."""
     from repro.core.scheduler import CACHED_POLICIES
 
-    for algo_name in ("bfs", "wcc"):
+    for algo_name, query in (("bfs", BFS(0)), ("wcc", WCC())):
         g = bench_graph(scale=11, symmetric=(algo_name == "wcc"))
         for policy in sorted(CACHED_POLICIES):
-            eng, hg = make_engine(g, pool_slots=32, cached_policy=policy)
-            if algo_name == "bfs":
-                _, m = run_bfs(eng, hg, 0)
-            else:
-                _, m = run_wcc(eng, hg)
+            sess = make_session(g, pool_slots=32, cached_policy=policy)
+            m = sess.run(query).metrics
             emit(f"pull_policy_{algo_name}_{policy}", 0.0,
                  f"io_{m.io_blocks}_ticks_{m.ticks}_edges_"
                  f"{m.edges_scanned}")
@@ -93,20 +90,22 @@ def main() -> None:
     pull_policy_sweep()
     for algo_name in ("bfs", "wcc"):
         g = bench_graph(scale=11, symmetric=(algo_name == "wcc"))
-        eng, hg = make_engine(g, pool_slots=32)
+        sess = make_session(g, pool_slots=32)
         if algo_name == "bfs":
-            levels, m_async = run_bfs(eng, hg, 0)
-            levels = np.where(levels >= 2 ** 29, -1, levels)
+            res = sess.run(BFS(0))
+            m_async = res.metrics
+            levels = np.where(res.result >= 2 ** 29, -1, res.result)
         else:
-            # WCC frontier levels ~ label-propagation rounds: use sync run
-            eng_s, hg_s = make_engine(g, sync=True, pool_slots=32)
-            _, m_sync_run = run_wcc(eng_s, hg_s)
-            _, m_async = run_wcc(eng, hg)
+            # WCC has no per-vertex level structure; the sync trace below
+            # is approximated as rounds over all active blocks instead
+            m_async = sess.run(WCC()).metrics
             levels = None
+        # the sync-trace simulator needs the block layout: an engine
+        # internal, accessed through the session it belongs to
+        eng, hg = sess.engine, sess.hg
         v_sched = np.asarray(eng.t_v_sched).copy()
-        v_sched[~np.asarray(eng.t_is_real)] = -1
-        orig_sched = np.full(hg.orig_num_vertices, -1)
-        orig_sched = v_sched[hg.v2id]
+        v_sched[~sess.ctx.is_real] = -1
+        orig_sched = v_sched[sess.ctx.v2id]
 
         if algo_name == "bfs":
             trace = sync_block_trace(hg, levels, orig_sched, eng.B)

@@ -4,23 +4,22 @@ delta=2 with the 64-byte metadata layout).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd
-from repro.algorithms import run_wcc
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import WCC
 from repro.core.afs import METADATA_BYTES
 
 
 def main() -> None:
-    model = ssd()
     g = bench_graph(scale=12, symmetric=True)
     for delta in (0, 1, 2, 3, 4):
-        eng, hg = make_engine(g, delta_deg=delta)
+        sess = make_session(g, delta_deg=delta)
         # paper: delta<2 needs wider AFS metadata (128/196B)
         meta_b = {0: 196, 1: 128}.get(delta, METADATA_BYTES)
-        mem = hg.index_memory_bytes() + eng.B * meta_b
-        _, m = run_wcc(eng, hg)
+        mem = sess.hg.index_memory_bytes() + sess.engine.B * meta_b
+        res = sess.run(WCC())
         emit(f"fig15_delta{delta}", 0.0,
-             f"mem_{mem}B_modeled_{model.modeled_runtime(m)*1e3:.2f}ms_io_"
-             f"{m.io_blocks}blk")
+             f"mem_{mem}B_modeled_{res.modeled_runtime*1e3:.2f}ms_io_"
+             f"{res.metrics.io_blocks}blk")
 
 
 if __name__ == "__main__":

@@ -10,11 +10,19 @@ queues stretch the actual schedule. Reported per point:
   * ``occ``         — measured mean in-flight reads while I/O is active
                       (``SSDModel.queue_occupancy``), which must be
                       monotone non-decreasing in queue_depth,
-  * the fifo/priority tick ratio per device speed, for BFS and for the
+  * the fifo-vs-policy tick ratio per device speed, for BFS and for the
     priority-sensitive PPR residual push — on PPR the priority
     scheduler's relative advantage grows as the device slows (the
     I/O-bound regime rewards loading the right blocks first; on BFS the
     frontier is level-structured and fifo is already near-optimal).
+    The cost-aware ``hybrid`` policy (priority × span, the ROADMAP
+    follow-on) is swept alongside ``priority`` — its span weighting is
+    meant to close priority's gap to fifo at fast devices while keeping
+    the slow-device win.
+
+The grid runs through ``GraphSession.sweep`` — one hybrid-storage build
+per graph, a fresh engine per config point, ``RunResult.config``
+carrying the provenance.
 
 ``REPRO_BENCH_SMOKE=1`` shrinks the grid for the tier-1 smoke path.
 """
@@ -22,59 +30,65 @@ from __future__ import annotations
 
 import os
 
-from benchmarks.common import bench_graph, emit, make_engine
-from repro.algorithms import run_bfs, run_ppr
+from benchmarks.common import bench_config, bench_graph, emit, make_session
+from repro.algorithms import BFS, PPR
 from repro.io_sim.device import DeviceModel
-from repro.io_sim.ssd_model import SSDModel
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 TPS = (1, 8)                                  # ticks per 4 KB slot
 QDS = (1, 8) if SMOKE else (1, 4, 16)         # queue depths
-POLICIES = ("fifo",) if SMOKE else ("fifo", "priority")
+POLICIES = ("fifo",) if SMOKE else ("fifo", "priority", "hybrid")
 
 
 def main() -> None:
     g = bench_graph(scale=10)
-    model = SSDModel()
+    sess = make_session(g, pool_slots=48)
+    model = sess.ssd
+    grid = [(tps, pol, qd) for tps in TPS for pol in POLICIES
+            for qd in QDS]
+    configs = [bench_config(pool_slots=48, cached_policy=pol,
+                            device=DeviceModel(ticks_per_slot=tps),
+                            queue_depth=qd)
+               for tps, pol, qd in grid]
     ticks: dict[tuple, int] = {}
     occs: dict[tuple, float] = {}
+    for point, res in zip(grid, sess.sweep(BFS(0), configs)):
+        tps, pol, qd = point
+        m = res.metrics
+        occ = model.queue_occupancy(m)
+        ticks[point] = m.ticks
+        occs[point] = occ
+        emit(f"device_tps{tps}_{pol}_qd{qd:02d}", 0.0,
+             f"ticks_{m.ticks}_occ_{occ:.2f}_ioactive_"
+             f"{m.io_active_ticks}")
     for tps in TPS:
-        dev = DeviceModel(ticks_per_slot=tps)
         for pol in POLICIES:
-            for qd in QDS:
-                eng, hg = make_engine(g, pool_slots=48, cached_policy=pol,
-                                      device=dev, queue_depth=qd)
-                _, m = run_bfs(eng, hg, 0)
-                occ = model.queue_occupancy(m)
-                ticks[(tps, pol, qd)] = m.ticks
-                occs[(tps, pol, qd)] = occ
-                emit(f"device_tps{tps}_{pol}_qd{qd:02d}", 0.0,
-                     f"ticks_{m.ticks}_occ_{occ:.2f}_ioactive_"
-                     f"{m.io_active_ticks}")
             # acceptance: occupancy monotone non-decreasing in queue_depth
             seq = [round(occs[(tps, pol, qd)], 6) for qd in QDS]
             ok = all(a <= b + 1e-9 for a, b in zip(seq, seq[1:]))
             emit(f"device_occ_monotone_tps{tps}_{pol}", 0.0,
                  "ok" if ok else f"VIOLATION_{seq}")
-    if "priority" in POLICIES:
+    if len(POLICIES) > 1:
         qd = QDS[len(QDS) // 2]
+        for pol in POLICIES[1:]:
+            for tps in TPS:
+                adv = ticks[(tps, "fifo", qd)] \
+                    / max(ticks[(tps, pol, qd)], 1)
+                emit(f"device_{pol}_advantage_bfs_tps{tps}_qd{qd:02d}",
+                     0.0, f"{adv:.3f}x_fewer_ticks")
+        # PPR: the priority-sensitive workload, smaller pool (the swept
+        # configs carry pool_slots, so the BFS session's graph is reused)
         for tps in TPS:
-            adv = ticks[(tps, "fifo", qd)] \
-                / max(ticks[(tps, "priority", qd)], 1)
-            emit(f"device_priority_advantage_bfs_tps{tps}_qd{qd:02d}",
-                 0.0, f"{adv:.3f}x_fewer_ticks")
-        for tps in TPS:
-            t = {}
-            for pol in POLICIES:
-                eng, hg = make_engine(g, pool_slots=24, cached_policy=pol,
-                                      device=DeviceModel(
-                                          ticks_per_slot=tps),
-                                      queue_depth=qd)
-                _, m = run_ppr(eng, hg, 0, r_max=1e-5)
-                t[pol] = m.ticks
-            adv = t["fifo"] / max(t["priority"], 1)
-            emit(f"device_priority_advantage_ppr_tps{tps}_qd{qd:02d}",
-                 0.0, f"{adv:.3f}x_fewer_ticks")
+            cfgs = [bench_config(pool_slots=24, cached_policy=pol,
+                                 device=DeviceModel(ticks_per_slot=tps),
+                                 queue_depth=qd)
+                    for pol in POLICIES]
+            t = {pol: r.metrics.ticks for pol, r in
+                 zip(POLICIES, sess.sweep(PPR(0, r_max=1e-5), cfgs))}
+            for pol in POLICIES[1:]:
+                adv = t["fifo"] / max(t[pol], 1)
+                emit(f"device_{pol}_advantage_ppr_tps{tps}_qd{qd:02d}",
+                     0.0, f"{adv:.3f}x_fewer_ticks")
 
 
 if __name__ == "__main__":

@@ -10,10 +10,8 @@ architectural there, and becomes a real kernel race on TPU).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import bench_graph, emit, make_engine, timed
-from repro.algorithms import run_bfs, run_wcc
+from benchmarks.common import bench_graph, emit, make_session, timed
+from repro.algorithms import BFS, WCC
 from repro.io_sim.ssd_model import SSDModel
 
 
@@ -21,14 +19,13 @@ def lanes_sweep() -> None:
     g = bench_graph(scale=12, symmetric=True)
     base = None
     for lanes in (1, 2, 4, 8, 16):
-        eng, hg = make_engine(g, lanes=lanes)
-        _, m = run_wcc(eng, hg)
-        model = SSDModel(lanes=lanes)
-        rt = max(m.ticks, 1)  # scheduler ticks ~ critical path length
+        sess = make_session(g, lanes=lanes, model=SSDModel(lanes=lanes))
+        res = sess.run(WCC())
+        rt = max(res.metrics.ticks, 1)  # ticks ~ critical path length
         base = base or rt
         emit(f"fig16_wcc_lanes{lanes:02d}", 0.0,
-             f"ticks_{m.ticks}_speedup_{base/rt:.2f}x_modeled_"
-             f"{model.modeled_runtime(m)*1e3:.2f}ms")
+             f"ticks_{res.metrics.ticks}_speedup_{base/rt:.2f}x_modeled_"
+             f"{res.modeled_runtime*1e3:.2f}ms")
 
 
 def backend_comparison() -> None:
@@ -37,17 +34,16 @@ def backend_comparison() -> None:
     g_wcc = bench_graph(scale=10, symmetric=True, seed=3)
     results: dict[str, dict] = {}
     for backend in ("gather", "pallas"):
-        eng, hg = make_engine(g_bfs, executor=backend)
-        (_, m_bfs), secs_bfs = timed(run_bfs, eng, hg, 0)
-        eng, hg = make_engine(g_wcc, executor=backend)
-        (_, m_wcc), secs_wcc = timed(run_wcc, eng, hg)
-        results[backend] = dict(m_bfs=m_bfs, m_wcc=m_wcc)
-        emit(f"exec_backend_{backend}_bfs", secs_bfs,
-             f"edges_{m_bfs.edges_scanned}_verts_"
-             f"{m_bfs.vertices_processed}_ticks_{m_bfs.ticks}")
-        emit(f"exec_backend_{backend}_wcc", secs_wcc,
-             f"edges_{m_wcc.edges_scanned}_verts_"
-             f"{m_wcc.vertices_processed}_ticks_{m_wcc.ticks}")
+        r_bfs, secs_bfs = timed(make_session(g_bfs, executor=backend).run,
+                                BFS(0))
+        r_wcc, secs_wcc = timed(make_session(g_wcc, executor=backend).run,
+                                WCC())
+        results[backend] = dict(m_bfs=r_bfs.metrics, m_wcc=r_wcc.metrics)
+        for algo, (m, secs) in (("bfs", (r_bfs.metrics, secs_bfs)),
+                                ("wcc", (r_wcc.metrics, secs_wcc))):
+            emit(f"exec_backend_{backend}_{algo}", secs,
+                 f"edges_{m.edges_scanned}_verts_"
+                 f"{m.vertices_processed}_ticks_{m.ticks}")
     for algo in ("m_bfs", "m_wcc"):
         mg, mp = results["gather"][algo], results["pallas"][algo]
         match = (mg.edges_scanned == mp.edges_scanned

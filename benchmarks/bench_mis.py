@@ -5,19 +5,19 @@ is pipeline occupancy, visible in the occupancy metric).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd, timed
-from repro.algorithms import run_mis
+from benchmarks.common import bench_graph, emit, make_session, timed
+from repro.algorithms import MIS
 
 
 def main() -> None:
-    model = ssd()
     g = bench_graph(scale=11, symmetric=True)
-    eng, hg = make_engine(g, pool_slots=48)
-    (mis, m), wall = timed(run_mis, eng, hg, 0)
+    sess = make_session(g, pool_slots=48)
+    res, wall = timed(sess.run, MIS(seed=0))
     emit("fig13_mis_acgraph", wall,
-         f"modeled_{model.modeled_runtime(m)*1e3:.2f}ms_io_"
-         f"{m.io_blocks}blk_occ_{model.occupancy(m):.2f}_size_"
-         f"{int(mis.sum())}")
+         f"modeled_{res.modeled_runtime*1e3:.2f}ms_io_"
+         f"{res.metrics.io_blocks}blk_occ_"
+         f"{sess.ssd.occupancy(res.metrics):.2f}_size_"
+         f"{int(res.result.sum())}")
 
 
 if __name__ == "__main__":

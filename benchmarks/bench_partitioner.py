@@ -3,30 +3,27 @@ last-fit (LPLF): ratio >1 means BF is worse (more I/O / time).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd
-from repro.algorithms import (run_bfs, run_kcore, run_pagerank, run_ppr,
-                              run_wcc)
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import BFS, KCore, PPR, PageRank, WCC
 
-ALGOS = {
-    "bfs": lambda e, h: run_bfs(e, h, 0),
-    "wcc": run_wcc,
-    "kcore": lambda e, h: run_kcore(e, h, 10),
-    "ssppr": lambda e, h: run_ppr(e, h, 0, r_max=1e-5),
-    "pagerank": lambda e, h: run_pagerank(e, h, r_max=1e-6),
+QUERIES = {
+    "bfs": BFS(0),
+    "wcc": WCC(),
+    "kcore": KCore(10),
+    "ssppr": PPR(0, r_max=1e-5),
+    "pagerank": PageRank(r_max=1e-6),
 }
 SYMMETRIC = {"wcc", "kcore"}
 
 
 def main() -> None:
-    model = ssd()
-    for name, fn in ALGOS.items():
+    for name, query in QUERIES.items():
         g = bench_graph(scale=12, symmetric=name in SYMMETRIC)
         io, rt = {}, {}
         for part in ("lplf", "bf"):
-            eng, hg = make_engine(g, partitioner=part)
-            _, m = fn(eng, hg)
-            io[part] = m.io_blocks
-            rt[part] = model.modeled_runtime(m)
+            res = make_session(g, partitioner=part).run(query)
+            io[part] = res.metrics.io_blocks
+            rt[part] = res.modeled_runtime
         emit(f"table2_{name}", 0.0,
              f"io_ratio_{io['bf']/max(io['lplf'],1):.2f}_time_ratio_"
              f"{rt['bf']/max(rt['lplf'],1e-12):.2f}")

@@ -3,20 +3,18 @@
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine
-from repro.algorithms import run_bfs, run_ppr
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import BFS, PPR
 
 
 def main() -> None:
     g = bench_graph(scale=12)
-    for name, fn in (("bfs", lambda e, h: run_bfs(e, h, 0)),
-                     ("ssppr", lambda e, h: run_ppr(e, h, 0,
-                                                    r_max=1e-5))):
+    for name, query in (("bfs", BFS(0)), ("ssppr", PPR(0, r_max=1e-5))):
         for mode in ("async", "sync"):
-            eng, hg = make_engine(g, sync=(mode == "sync"), pool_slots=48)
-            _, m = fn(eng, hg)
+            sess = make_session(g, sync=(mode == "sync"), pool_slots=48)
+            res = sess.run(query)
             emit(f"fig10_{name}_{mode}", 0.0,
-                 f"{m.bytes_per_edge():.2f}_bytes_per_edge")
+                 f"{res.metrics.bytes_per_edge():.2f}_bytes_per_edge")
 
 
 if __name__ == "__main__":

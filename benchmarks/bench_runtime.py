@@ -6,33 +6,30 @@ device + measured stall ticks) and the speedup ratio.
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd, timed
-from repro.algorithms import (run_bfs, run_kcore, run_pagerank, run_ppr,
-                              run_wcc)
+from benchmarks.common import bench_graph, emit, make_session, timed
+from repro.algorithms import BFS, KCore, PPR, PageRank, WCC
 
-ALGOS = {
-    "bfs": lambda e, h: run_bfs(e, h, 0),
-    "wcc": run_wcc,
-    "kcore": lambda e, h: run_kcore(e, h, 10),
-    "ppr": lambda e, h: run_ppr(e, h, 0, r_max=1e-5),
-    "pagerank": lambda e, h: run_pagerank(e, h, r_max=1e-6),
+QUERIES = {
+    "bfs": BFS(0),
+    "wcc": WCC(),
+    "kcore": KCore(10),
+    "ppr": PPR(0, r_max=1e-5),
+    "pagerank": PageRank(r_max=1e-6),
 }
 SYMMETRIC = {"wcc", "kcore"}
 
 
 def main() -> None:
-    model = ssd()
-    for name, fn in ALGOS.items():
+    for name, query in QUERIES.items():
         g = bench_graph(scale=12, symmetric=name in SYMMETRIC)
         results = {}
         for mode in ("async", "sync"):
-            eng, hg = make_engine(g, sync=(mode == "sync"), pool_slots=64)
-            (_, metrics), wall = timed(fn, eng, hg)
-            rt = model.modeled_runtime(metrics)
-            results[mode] = rt
+            sess = make_session(g, sync=(mode == "sync"), pool_slots=64)
+            res, wall = timed(sess.run, query)
+            results[mode] = res.modeled_runtime
             emit(f"fig8_{name}_{mode}", wall,
-                 f"modeled_{rt*1e3:.2f}ms_io_{metrics.io_blocks}blk_"
-                 f"ticks_{metrics.ticks}")
+                 f"modeled_{res.modeled_runtime*1e3:.2f}ms_io_"
+                 f"{res.metrics.io_blocks}blk_ticks_{res.metrics.ticks}")
         speedup = results["sync"] / max(results["async"], 1e-12)
         emit(f"fig8_{name}_speedup", 0.0, f"{speedup:.2f}x")
 

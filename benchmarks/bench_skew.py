@@ -8,30 +8,27 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, ssd
-from repro.algorithms import run_kcore, run_pagerank, run_wcc
+from benchmarks.common import emit, make_session
+from repro.algorithms import KCore, PageRank, WCC
 from repro.storage.csr import symmetrize
 from repro.storage.rmat import rmat_graph
 
 
 def main() -> None:
-    model = ssd()
     for a in (0.30, 0.45, 0.57, 0.65):
         g = rmat_graph(scale=12, avg_degree=16, a=a,
                        b=(1 - a) / 3, c=(1 - a) / 3, seed=3)
         sigma = float(np.std(g.degrees()))
         gs = symmetrize(g)
         t0 = time.time()
-        eng, hg = make_engine(gs)
+        sess = make_session(gs)
         prep = time.time() - t0
-        for name, fn in (("wcc", run_wcc),
-                         ("kcore", lambda e, h: run_kcore(e, h, 10)),
-                         ("pagerank",
-                          lambda e, h: run_pagerank(e, h, r_max=1e-6))):
-            _, m = fn(eng, hg)
+        for name, query in (("wcc", WCC()), ("kcore", KCore(10)),
+                            ("pagerank", PageRank(r_max=1e-6))):
+            res = sess.run(query)
             emit(f"fig17_{name}_a{int(a*100)}", 0.0,
                  f"sigma_{sigma:.1f}_modeled_"
-                 f"{model.modeled_runtime(m)*1e3:.2f}ms_prep_"
+                 f"{res.modeled_runtime*1e3:.2f}ms_prep_"
                  f"{prep*1e3:.0f}ms")
 
 

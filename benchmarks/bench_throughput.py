@@ -6,35 +6,22 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_graph, emit, make_engine, ssd
-from repro.algorithms.bfs import INF32, bfs_algorithm
-from repro.algorithms.kcore import kcore_algorithm
-
-
-def run_traced(eng, hg, which: str):
-    if which == "bfs":
-        src = int(hg.v2id[0])
-        dis0 = np.full(eng.V, INF32, dtype=np.int32)
-        dis0[src] = 0
-        front0 = np.zeros(eng.V, dtype=bool)
-        front0[src] = True
-        return eng.run(bfs_algorithm(), front0, {"dis": dis0})
-    deg0 = np.asarray(eng.t_v_deg, dtype=np.int32).copy()
-    front0 = (deg0 < 10) & np.asarray(eng.t_is_real)
-    return eng.run(kcore_algorithm(10), front0, {"deg": deg0})
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import BFS, KCore
 
 
 def main() -> None:
-    model = ssd()
-    for name, sym in (("bfs", False), ("kcore", True)):
+    for name, query, sym in (("bfs", BFS(0), False),
+                             ("kcore", KCore(10), True)):
         g = bench_graph(scale=12, symmetric=sym)
         for mode in ("async", "sync"):
-            eng, hg = make_engine(g, sync=(mode == "sync"), trace=True,
-                                  pool_slots=48)
-            _, m, trace = run_traced(eng, hg, name)
+            sess = make_session(g, sync=(mode == "sync"), trace=True,
+                                pool_slots=48)
+            res = sess.run(query)
+            m, model = res.metrics, sess.ssd
             occ = model.occupancy(m)
             bw = model.effective_throughput_gbps(m)
-            io = trace["io_blocks"] if trace else np.zeros(1)
+            io = res.trace["io_blocks"] if res.trace else np.zeros(1)
             zero_io = float((io == 0).mean())
             emit(f"fig3_12_{name}_{mode}", 0.0,
                  f"occupancy_{occ:.2f}_bw_{bw:.2f}GBps_zeroio_"

@@ -4,8 +4,8 @@ scheduling (priority-ordered blocks converge with fewer edge accesses).
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_engine
-from repro.algorithms import run_wcc
+from benchmarks.common import bench_graph, emit, make_session
+from repro.algorithms import WCC
 
 
 def main() -> None:
@@ -13,9 +13,9 @@ def main() -> None:
     edges = {}
     for mode, policy in (("async_priority", "priority"),
                          ("async_fifo", "fifo"), ("sync", "fifo")):
-        eng, hg = make_engine(g, sync=(mode == "sync"),
-                              cached_policy=policy, pool_slots=64)
-        _, m = run_wcc(eng, hg)
+        sess = make_session(g, sync=(mode == "sync"),
+                            cached_policy=policy, pool_slots=64)
+        m = sess.run(WCC()).metrics
         edges[mode] = m.edges_scanned
         emit(f"fig11_wcc_{mode}", 0.0, f"{m.edges_scanned}_edges")
     ratio = edges["sync"] / max(edges["async_priority"], 1)

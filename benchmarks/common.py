@@ -14,6 +14,7 @@ import time
 import numpy as np
 
 from repro.core.engine import Engine, EngineConfig
+from repro.core.session import GraphSession
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import CSRGraph, symmetrize
 from repro.storage.hybrid import build_hybrid
@@ -38,19 +39,34 @@ def bench_graph(scale: int = 12, avg_degree: int = 16, seed: int = 0,
     return symmetrize(g) if symmetric else g
 
 
-def make_engine(g: CSRGraph, *, sync: bool = False, pool_slots: int = 64,
-                lanes: int = 4, partitioner: str = "lplf",
+def bench_config(*, sync: bool = False, pool_slots: int = 64,
+                 lanes: int = 4, trace: bool = False,
+                 cached_policy: str = "fifo", executor: str = "gather",
+                 chunk_size: int = 128, queue_depth: int = 16,
+                 device=None) -> EngineConfig:
+    return EngineConfig(lanes=lanes, prefetch=8, queue_depth=queue_depth,
+                        pool_slots=pool_slots, chunk_size=chunk_size,
+                        sync=sync, trace=trace, cached_policy=cached_policy,
+                        executor=executor, device=device)
+
+
+def make_engine(g: CSRGraph, *, partitioner: str = "lplf",
                 delta_deg: int = 2, block_edges: int = BLOCK_EDGES,
-                trace: bool = False, cached_policy: str = "fifo",
-                executor: str = "gather", chunk_size: int = 128,
-                queue_depth: int = 16, device=None):
+                **cfg_kw):
     hg = build_hybrid(g, delta_deg=delta_deg, partitioner=partitioner,
                       block_edges=block_edges)
-    cfg = EngineConfig(lanes=lanes, prefetch=8, queue_depth=queue_depth,
-                       pool_slots=pool_slots, chunk_size=chunk_size,
-                       sync=sync, trace=trace, cached_policy=cached_policy,
-                       executor=executor, device=device)
-    return Engine(hg, cfg), hg
+    return Engine(hg, bench_config(**cfg_kw)), hg
+
+
+def make_session(g: CSRGraph, *, partitioner: str = "lplf",
+                 delta_deg: int = 2, block_edges: int = BLOCK_EDGES,
+                 model: SSDModel | None = None, **cfg_kw) -> GraphSession:
+    """Benchmark-standard session: hybrid storage + engine config from
+    the same knobs as :func:`make_engine`, SSD model attached so every
+    RunResult carries ``modeled_runtime``."""
+    eng, _ = make_engine(g, partitioner=partitioner, delta_deg=delta_deg,
+                         block_edges=block_edges, **cfg_kw)
+    return GraphSession.from_engine(eng, ssd=model or ssd())
 
 
 def ssd() -> SSDModel:

@@ -1,15 +1,20 @@
-"""Quickstart: build a graph, partition it into the hybrid storage format,
-and run the paper's algorithms on the asynchronous engine.
+"""Quickstart: build a graph, open a GraphSession on it, and run the
+paper's algorithms as query objects.
+
+The session owns everything the paper's runtime owns — hybrid storage,
+the asynchronous engine, the compile cache, and the SSD performance
+model. User code never touches engine internals (reordered vertex ids,
+frontiers, degree tables): a query object describes the computation and
+``RunResult.result`` comes back indexed by ORIGINAL vertex ids.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.algorithms import run_bfs, run_kcore, run_pagerank, run_wcc
-from repro.core.engine import Engine, EngineConfig
+from repro.algorithms import BFS, KCore, PageRank, WCC
+from repro.core import EngineConfig, GraphSession
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import symmetrize
-from repro.storage.hybrid import build_hybrid
 from repro.storage.rmat import rmat_graph
 
 
@@ -19,35 +24,38 @@ def main() -> None:
     print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} "
           f"({g.size_bytes()/1e6:.1f} MB CSR)")
 
-    # 2. hybrid storage: LPLF 4KB-block partition + mini edge lists
-    hg = build_hybrid(g, delta_deg=2)
+    # 2. a session: hybrid storage (LPLF partition + mini edge lists),
+    #    the block-centric async engine, and an attached SSD model
+    sess = GraphSession(g, EngineConfig(lanes=4, pool_slots=64),
+                        ssd=SSDModel())
+    hg = sess.hg
     print(f"hybrid: {hg.num_blocks} disk blocks, {hg.num_mini} mini "
           f"vertices in memory, index {hg.index_memory_bytes()/1e3:.1f} KB "
           f"(naive: {hg.naive_index_memory_bytes()/1e3:.1f} KB)")
 
-    # 3. the block-centric asynchronous engine (Sec. 4)
-    eng = Engine(hg, EngineConfig(lanes=4, pool_slots=64))
-    model = SSDModel()
+    # 3. queries: BFS + PageRank share the session (and its compile cache)
+    res = sess.run(BFS(source=0))
+    reached = int((res.result < 2 ** 29).sum())
+    print(f"BFS: reached {reached} vertices | IO {res.metrics.io_blocks} "
+          f"blocks ({res.metrics.bytes_per_edge():.1f} B/edge) | modeled "
+          f"{res.modeled_runtime*1e3:.2f} ms")
 
-    dis, m = run_bfs(eng, hg, source=0)
-    reached = int((dis < 2 ** 29).sum())
-    print(f"BFS: reached {reached} vertices | IO {m.io_blocks} blocks "
-          f"({m.bytes_per_edge():.1f} B/edge) | modeled "
-          f"{model.modeled_runtime(m)*1e3:.2f} ms")
+    res = sess.run(PageRank(r_max=1e-6))
+    top = np.argsort(-res.result)[:5]
+    print(f"PageRank: top-5 vertices {top.tolist()} | "
+          f"IO {res.metrics.io_blocks}")
 
-    gs = symmetrize(g)
-    hgs = build_hybrid(gs, delta_deg=2)
-    engs = Engine(hgs, EngineConfig(lanes=4, pool_slots=64))
-    labels, m = run_wcc(engs, hgs)
-    print(f"WCC: {len(np.unique(labels))} components | IO {m.io_blocks} "
-          f"blocks | reuse hits {m.reuse_activations}")
-
-    core, m = run_kcore(engs, hgs, k=10)
-    print(f"10-core: {int(core.sum())} vertices | IO {m.io_blocks} blocks")
-
-    pr, m = run_pagerank(eng, hg, r_max=1e-6)
-    top = np.argsort(-pr)[:5]
-    print(f"PageRank: top-5 vertices {top.tolist()} | IO {m.io_blocks}")
+    # 4. undirected analytics need a symmetrized session; run_many
+    #    batches queries over one engine/compile cache
+    sess_sym = GraphSession(symmetrize(g),
+                            EngineConfig(lanes=4, pool_slots=64),
+                            ssd=SSDModel())
+    r_wcc, r_core = sess_sym.run_many([WCC(), KCore(k=10)])
+    print(f"WCC: {len(np.unique(r_wcc.result))} components | "
+          f"IO {r_wcc.metrics.io_blocks} blocks | reuse hits "
+          f"{r_wcc.metrics.reuse_activations}")
+    print(f"10-core: {int(r_core.result.sum())} vertices | "
+          f"IO {r_core.metrics.io_blocks} blocks")
 
 
 if __name__ == "__main__":

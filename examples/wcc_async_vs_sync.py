@@ -5,11 +5,10 @@ for WCC (work inflation, Sec. 3.1) and BFS (read inflation).
 
     PYTHONPATH=src python examples/wcc_async_vs_sync.py
 """
-from repro.algorithms import run_bfs, run_wcc
-from repro.core.engine import Engine, EngineConfig
+from repro.algorithms import BFS, WCC
+from repro.core import EngineConfig, GraphSession
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import symmetrize
-from repro.storage.hybrid import build_hybrid
 from repro.storage.rmat import rmat_graph
 
 
@@ -17,31 +16,28 @@ def run(algo: str, sync: bool, cached_policy: str = "fifo"):
     g = rmat_graph(scale=12, avg_degree=16, seed=1)
     if algo == "wcc":
         g = symmetrize(g)
-    hg = build_hybrid(g, delta_deg=2, block_edges=256)
-    eng = Engine(hg, EngineConfig(lanes=4, pool_slots=64, sync=sync,
-                                  cached_policy=cached_policy))
-    if algo == "wcc":
-        _, m = run_wcc(eng, hg)
-    else:
-        _, m = run_bfs(eng, hg, 0)
-    return m
+    sess = GraphSession(
+        g, EngineConfig(lanes=4, pool_slots=64, sync=sync,
+                        cached_policy=cached_policy),
+        ssd=SSDModel(), block_edges=256)
+    return sess.run(WCC() if algo == "wcc" else BFS(0))
 
 
 def main() -> None:
-    model = SSDModel()
     for algo in ("bfs", "wcc"):
-        m_async = run(algo, sync=False)
-        m_sync = run(algo, sync=True)
+        r_async = run(algo, sync=False)
+        r_sync = run(algo, sync=True)
         print(f"=== {algo.upper()} ===")
-        for tag, m in (("async", m_async), ("sync ", m_sync)):
+        for tag, r in (("async", r_async), ("sync ", r_sync)):
+            m = r.metrics
             print(f"  {tag}: IO {m.io_blocks:6d} blocks | edges "
                   f"{m.edges_scanned:8d} | reuse {m.blocks_reused:5d} | "
                   f"barriers {m.barriers:3d} | modeled "
-                  f"{model.modeled_runtime(m)*1e3:8.2f} ms")
+                  f"{r.modeled_runtime*1e3:8.2f} ms")
         print(f"  I/O reduction: "
-              f"{m_sync.io_blocks / max(m_async.io_blocks, 1):.2f}x | "
+              f"{r_sync.metrics.io_blocks / max(r_async.metrics.io_blocks, 1):.2f}x | "
               f"modeled speedup: "
-              f"{model.modeled_runtime(m_sync) / max(model.modeled_runtime(m_async), 1e-12):.2f}x")
+              f"{r_sync.modeled_runtime / max(r_async.modeled_runtime, 1e-12):.2f}x")
 
 
 if __name__ == "__main__":

@@ -11,4 +11,4 @@ Layers:
   launch/      production mesh, multi-pod dry-run, roofline, train/serve
 """
 
-__version__ = "0.1.0"
+__version__ = "0.3.0"

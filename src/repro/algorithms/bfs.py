@@ -5,13 +5,20 @@ via an atomic CAS loop in the paper — here the batched min-combiner, which
 is the same commutative monoid. A vertex activates when its distance
 improves; its scheduling priority is -dis (smaller distance first), the
 paper's "vertex distance as the priority metric".
+
+``BFS(source)`` is the query-object entry point
+(``session.run(BFS(0)).result`` = distances in ORIGINAL vertex ids,
+``INF32`` = unreached); ``run_bfs`` is the deprecated wrapper.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import AlgoContext, Algorithm, Query, StateT
 from repro.core.engine import Engine, Metrics
 from repro.storage.hybrid import HybridGraph
 
@@ -19,6 +26,8 @@ INF32 = np.int32(2 ** 30)
 
 
 def bfs_algorithm() -> Algorithm:
+    """Bare engine-facing spec (no init/extract); kept for executor-level
+    tests and power users driving ``engine.run`` directly."""
     return Algorithm(
         name="bfs",
         key="dis",
@@ -32,14 +41,42 @@ def bfs_algorithm() -> Algorithm:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class BFS(Query):
+    """Single-source BFS; ``result`` = int32 distances indexed by
+    ORIGINAL vertex id (``INF32`` = unreached)."""
+
+    source: int
+
+    def build(self) -> Algorithm:
+        source = self.source
+
+        def init(ctx: AlgoContext):
+            src = ctx.engine_id(source)
+            dis0 = np.full(ctx.V, INF32, dtype=np.int32)
+            dis0[src] = 0
+            front0 = np.zeros(ctx.V, dtype=bool)
+            front0[src] = True
+            return front0, {"dis": dis0}
+
+        def extract(state: StateT, ctx: AlgoContext):
+            return np.asarray(state["dis"])[ctx.v2id]
+
+        return dataclasses.replace(bfs_algorithm(), init=init,
+                                   extract=extract)
+
+
 def run_bfs(engine: Engine, hg: HybridGraph, source: int
             ) -> tuple[np.ndarray, Metrics]:
-    """Returns distances indexed by ORIGINAL vertex id (INF = unreached)."""
-    src_new = int(hg.v2id[source])
-    assert src_new >= 0
-    dis0 = np.full(engine.V, INF32, dtype=np.int32)
-    dis0[src_new] = 0
-    front0 = np.zeros(engine.V, dtype=bool)
-    front0[src_new] = True
-    state, metrics, _ = engine.run(bfs_algorithm(), front0, {"dis": dis0})
-    return np.asarray(state["dis"])[hg.v2id], metrics
+    """Deprecated: use ``GraphSession.run(BFS(source))``.
+
+    Returns distances indexed by ORIGINAL vertex id (INF = unreached).
+    Thin delegate onto the query path — verified bit-identical.
+    """
+    from repro.core.session import GraphSession
+
+    warnings.warn("run_bfs is deprecated; use GraphSession.run(BFS(source))",
+                  DeprecationWarning, stacklevel=2)
+    del hg  # the engine owns its HybridGraph
+    res = GraphSession.from_engine(engine).run(BFS(source))
+    return res.result, res.metrics

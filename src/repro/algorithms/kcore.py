@@ -7,19 +7,24 @@ when the value crosses k -> k-1. In the batched engine the crossing test
 decrease monotonically — the same exactly-once guarantee the paper proves
 via fetchSub atomicity.
 
-Input graphs must be symmetrized.
+Input graphs must be symmetrized. ``KCore(k)`` is the query-object entry
+point; ``run_kcore`` is the deprecated wrapper.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import AlgoContext, Algorithm, Query, StateT
 from repro.core.engine import Engine, Metrics
 from repro.storage.hybrid import HybridGraph
 
 
 def kcore_algorithm(k: int) -> Algorithm:
+    """Bare engine-facing spec (no init/extract)."""
     return Algorithm(
         name=f"kcore_{k}",
         key="deg",
@@ -33,17 +38,41 @@ def kcore_algorithm(k: int) -> Algorithm:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class KCore(Query):
+    """k-core membership on a symmetrized graph; ``result`` =
+    bool[orig_num_vertices] (True = vertex is in the k-core)."""
+
+    k: int
+
+    def build(self) -> Algorithm:
+        k = self.k
+
+        def init(ctx: AlgoContext):
+            # current-degree state over the engine id space
+            deg0 = ctx.degrees.astype(np.int32).copy()
+            # foreachVertex: activate vertices with initial degree < k
+            front0 = (deg0 < k) & ctx.is_real
+            return front0, {"deg": deg0}
+
+        def extract(state: StateT, ctx: AlgoContext):
+            return (np.asarray(state["deg"]) >= k)[ctx.v2id]
+
+        return dataclasses.replace(kcore_algorithm(k), init=init,
+                                   extract=extract)
+
+
 def run_kcore(engine: Engine, hg: HybridGraph, k: int
               ) -> tuple[np.ndarray, Metrics]:
-    """Returns bool[orig_num_vertices]: membership in the k-core."""
-    # current-degree state over the reordered id space
-    ids = np.arange(engine.V, dtype=np.int64)
-    deg0 = np.asarray(engine.t_v_deg, dtype=np.int32).copy()
-    is_real = np.asarray(engine.t_is_real)
-    # foreachVertex: activate vertices with initial degree < k
-    front0 = (deg0 < k) & is_real
-    state, metrics, _ = engine.run(kcore_algorithm(k), front0,
-                                   {"deg": deg0})
-    in_core_new = np.asarray(state["deg"]) >= k
-    del ids
-    return in_core_new[hg.v2id], metrics
+    """Deprecated: use ``GraphSession.run(KCore(k))``.
+
+    Returns bool[orig_num_vertices]: membership in the k-core. Thin
+    delegate onto the query path — verified bit-identical.
+    """
+    from repro.core.session import GraphSession
+
+    warnings.warn("run_kcore is deprecated; use GraphSession.run(KCore(k))",
+                  DeprecationWarning, stacklevel=2)
+    del hg
+    res = GraphSession.from_engine(engine).run(KCore(k))
+    return res.result, res.metrics

@@ -11,14 +11,19 @@ commutative, so the engine's asynchrony is safe.
 Determinism: labels are a fixed random permutation (fixed seed), matching
 the paper's fixed-seed comparability setup.
 
-Input graphs must be symmetrized.
+Input graphs must be symmetrized. ``MIS(seed)`` is the query-object
+entry point — it overrides ``Query.execute`` because of the host-level
+barrier loop; ``run_mis`` is the deprecated wrapper.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import Algorithm, Query
 from repro.core.engine import Engine, Metrics
 from repro.storage.hybrid import HybridGraph
 
@@ -47,35 +52,65 @@ def _push_death_marks() -> Algorithm:
         on_process=None)
 
 
+@dataclasses.dataclass(frozen=True)
+class MIS(Query):
+    """Maximal independent set on a symmetrized graph; ``result`` =
+    bool[orig_num_vertices] membership, ``metrics`` summed over every
+    phase of every round. Overrides ``execute`` — the round structure
+    needs host barriers between engine passes."""
+
+    seed: int = 0
+
+    def execute(self, session):
+        engine, ctx = session.engine, session.ctx
+        V = ctx.V
+        rng = np.random.default_rng(self.seed)
+        label = np.full(V, INF32, dtype=np.int32)
+        is_real = ctx.is_real
+        real_ids = np.where(is_real)[0]
+        label[real_ids] = rng.permutation(
+            real_ids.shape[0]).astype(np.int32)
+
+        live = is_real.copy()
+        in_mis = np.zeros(V, dtype=bool)
+        total: Metrics | None = None
+        phase_traces: list = []
+        while live.any():
+            # phase 1: live vertices advertise labels (min over live nbrs)
+            st1, m1, t1 = engine.run(
+                _push_min_labels(), live,
+                {"minl": np.full(V, INF32, np.int32), "label": label})
+            minl = np.asarray(st1["minl"])
+            new_mis = live & (label < minl)
+            assert new_mis.any(), "MIS round must make progress"
+            in_mis |= new_mis
+            # phase 2 (after barrier): winners kill their neighborhoods
+            st2, m2, t2 = engine.run(
+                _push_death_marks(), new_mis,
+                {"mark": np.zeros(V, np.int32), "label": label})
+            mark = np.asarray(st2["mark"])
+            live = live & ~new_mis & (mark == 0)
+            total = m1 + m2 if total is None else total + m1 + m2
+            phase_traces += [t1, t2]
+        # multi-pass query: the RunResult trace contract (a dict iff
+        # cfg.trace) is kept by nesting the per-engine-pass traces
+        trace = {"phases": phase_traces} if engine.cfg.trace else None
+        return session._wrap(self, in_mis[ctx.v2id],
+                             {"in_mis": in_mis, "label": label},
+                             total, trace)
+
+
 def run_mis(engine: Engine, hg: HybridGraph, seed: int = 0
             ) -> tuple[np.ndarray, Metrics]:
-    """Returns bool[orig_num_vertices] MIS membership + summed metrics."""
-    V = engine.V
-    rng = np.random.default_rng(seed)
-    label = np.full(V, INF32, dtype=np.int32)
-    is_real = np.asarray(engine.t_is_real)
-    real_ids = np.where(is_real)[0]
-    label[real_ids] = rng.permutation(real_ids.shape[0]).astype(np.int32)
+    """Deprecated: use ``GraphSession.run(MIS(seed))``.
 
-    live = is_real.copy()
-    in_mis = np.zeros(V, dtype=bool)
-    total: Metrics | None = None
-    rounds = 0
-    while live.any():
-        rounds += 1
-        # phase 1: live vertices advertise labels (min over live neighbors)
-        st1, m1, _ = engine.run(
-            _push_min_labels(), live,
-            {"minl": np.full(V, INF32, np.int32), "label": label})
-        minl = np.asarray(st1["minl"])
-        new_mis = live & (label < minl)
-        assert new_mis.any(), "MIS round must make progress"
-        in_mis |= new_mis
-        # phase 2 (after barrier): winners kill their neighborhoods
-        st2, m2, _ = engine.run(
-            _push_death_marks(), new_mis,
-            {"mark": np.zeros(V, np.int32), "label": label})
-        mark = np.asarray(st2["mark"])
-        live = live & ~new_mis & (mark == 0)
-        total = m1 + m2 if total is None else total + m1 + m2
-    return in_mis[hg.v2id], total
+    Returns bool[orig_num_vertices] MIS membership + summed metrics.
+    Thin delegate onto the query path — verified bit-identical.
+    """
+    from repro.core.session import GraphSession
+
+    warnings.warn("run_mis is deprecated; use GraphSession.run(MIS(seed))",
+                  DeprecationWarning, stacklevel=2)
+    del hg
+    res = GraphSession.from_engine(engine).run(MIS(seed=seed))
+    return res.result, res.metrics

@@ -10,13 +10,20 @@ determinization; conserves sum(p) + sum(r) <= 1).
 The scheduling priority is the scaled residual — pushing large residuals
 first accelerates convergence, the asynchronous analogue of prioritized
 sequential push.
+
+``PPR(source, alpha, r_max)`` / ``PageRank(alpha, r_max)`` are the
+query-object entry points; ``run_ppr`` / ``run_pagerank`` are the
+deprecated wrappers.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import AlgoContext, Algorithm, Query, StateT
 from repro.core.engine import Engine, Metrics
 from repro.storage.hybrid import HybridGraph
 
@@ -49,33 +56,90 @@ def ppr_algorithm(alpha: float = 0.15, r_max: float = 1e-6) -> Algorithm:
                      params=(alpha, r_max))
 
 
-def _run_push(engine: Engine, hg: HybridGraph, r0: np.ndarray,
-              alpha: float, r_max: float) -> tuple[np.ndarray, np.ndarray,
-                                                   Metrics]:
-    deg = np.asarray(engine.t_v_deg)
-    is_real = np.asarray(engine.t_is_real)
-    front0 = (r0 > r_max * deg) & is_real
-    state, metrics, _ = engine.run(
-        ppr_algorithm(alpha, r_max), front0,
-        {"p": np.zeros(engine.V, np.float32), "r": r0.astype(np.float32)})
-    return np.asarray(state["p"]), np.asarray(state["r"]), metrics
+def _push_spec(alpha: float, r_max: float, make_r0) -> Algorithm:
+    """Forward-push spec with init/extract hooks; ``make_r0(ctx)`` builds
+    the initial residual distribution in the engine vertex domain."""
+
+    def init(ctx: AlgoContext):
+        r0 = make_r0(ctx).astype(np.float32)
+        front0 = (r0 > r_max * ctx.degrees) & ctx.is_real
+        return front0, {"p": np.zeros(ctx.V, np.float32), "r": r0}
+
+    def extract(state: StateT, ctx: AlgoContext):
+        return np.asarray(state["p"])[ctx.v2id]
+
+    return dataclasses.replace(ppr_algorithm(alpha, r_max), init=init,
+                               extract=extract)
+
+
+@dataclasses.dataclass(frozen=True)
+class PPR(Query):
+    """Single-source personalized PageRank; ``result`` = float32
+    estimates ``p`` indexed by ORIGINAL vertex id (residuals stay in
+    ``state['r']``)."""
+
+    source: int
+    alpha: float = 0.15
+    r_max: float = 1e-6
+
+    def build(self) -> Algorithm:
+        source = self.source
+
+        def make_r0(ctx: AlgoContext):
+            r0 = np.zeros(ctx.V, dtype=np.float32)
+            r0[ctx.engine_id(source)] = 1.0
+            return r0
+
+        return _push_spec(self.alpha, self.r_max, make_r0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRank(Query):
+    """PageRank = PPR with uniform initial distribution (footnote 1);
+    ``result`` = estimates indexed by ORIGINAL vertex id."""
+
+    alpha: float = 0.15
+    r_max: float = 1e-7
+
+    def build(self) -> Algorithm:
+        def make_r0(ctx: AlgoContext):
+            r0 = np.zeros(ctx.V, dtype=np.float32)
+            r0[ctx.v2id] = 1.0 / ctx.orig_num_vertices
+            return r0
+
+        return _push_spec(self.alpha, self.r_max, make_r0)
 
 
 def run_ppr(engine: Engine, hg: HybridGraph, source: int,
             alpha: float = 0.15, r_max: float = 1e-6
             ) -> tuple[np.ndarray, Metrics]:
-    """Returns PPR estimates p indexed by ORIGINAL vertex id."""
-    r0 = np.zeros(engine.V, dtype=np.float32)
-    r0[int(hg.v2id[source])] = 1.0
-    p, _, metrics = _run_push(engine, hg, r0, alpha, r_max)
-    return p[hg.v2id], metrics
+    """Deprecated: use ``GraphSession.run(PPR(source, alpha, r_max))``.
+
+    Returns PPR estimates p indexed by ORIGINAL vertex id. Thin delegate
+    onto the query path — verified bit-identical.
+    """
+    from repro.core.session import GraphSession
+
+    warnings.warn("run_ppr is deprecated; use GraphSession.run(PPR(...))",
+                  DeprecationWarning, stacklevel=2)
+    del hg
+    res = GraphSession.from_engine(engine).run(
+        PPR(source, alpha=alpha, r_max=r_max))
+    return res.result, res.metrics
 
 
 def run_pagerank(engine: Engine, hg: HybridGraph, alpha: float = 0.15,
                  r_max: float = 1e-7) -> tuple[np.ndarray, Metrics]:
-    """PageRank = PPR with uniform initial distribution (paper footnote 1)."""
-    n = hg.orig_num_vertices
-    r0 = np.zeros(engine.V, dtype=np.float32)
-    r0[hg.v2id] = 1.0 / n
-    p, _, metrics = _run_push(engine, hg, r0, alpha, r_max)
-    return p[hg.v2id], metrics
+    """Deprecated: use ``GraphSession.run(PageRank(alpha, r_max))``.
+
+    Thin delegate onto the query path — verified bit-identical.
+    """
+    from repro.core.session import GraphSession
+
+    warnings.warn(
+        "run_pagerank is deprecated; use GraphSession.run(PageRank(...))",
+        DeprecationWarning, stacklevel=2)
+    del hg
+    res = GraphSession.from_engine(engine).run(
+        PageRank(alpha=alpha, r_max=r_max))
+    return res.result, res.metrics

@@ -7,14 +7,18 @@ label are ultimately useful, so scheduling min-label blocks first avoids
 redundant edge accesses (Sec. 3.1 "Work Inflation").
 
 Input graphs must be symmetrized (undirected semantics), as in the paper's
-preprocessing.
+preprocessing. ``WCC()`` is the query-object entry point; ``run_wcc`` is
+the deprecated wrapper.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import AlgoContext, Algorithm, Query, StateT
 from repro.core.engine import Engine, Metrics
 from repro.storage.hybrid import HybridGraph
 
@@ -22,6 +26,7 @@ INF32 = np.int32(2 ** 30)
 
 
 def wcc_algorithm() -> Algorithm:
+    """Bare engine-facing spec (no init/extract)."""
     return Algorithm(
         name="wcc",
         key="label",
@@ -35,17 +40,40 @@ def wcc_algorithm() -> Algorithm:
     )
 
 
-def run_wcc(engine: Engine, hg: HybridGraph) -> tuple[np.ndarray, Metrics]:
-    """Returns component labels indexed by ORIGINAL vertex id.
+@dataclasses.dataclass(frozen=True)
+class WCC(Query):
+    """Connected components on a symmetrized graph; ``result`` =
+    component labels indexed by ORIGINAL vertex id, canonicalized to the
+    minimum original id in each component."""
 
-    Labels are canonicalized to the minimum ORIGINAL id in each component.
+    def build(self) -> Algorithm:
+        def init(ctx: AlgoContext):
+            label0 = np.arange(ctx.V, dtype=np.int32)
+            front0 = np.ones(ctx.V, dtype=bool)  # all vertices active
+            return front0, {"label": label0}
+
+        def extract(state: StateT, ctx: AlgoContext):
+            new_labels = np.asarray(state["label"])[ctx.v2id]
+            # canonicalize: min original id carrying each reordered label
+            canon = np.full(ctx.V, np.iinfo(np.int64).max, dtype=np.int64)
+            np.minimum.at(canon, new_labels,
+                          np.arange(ctx.orig_num_vertices))
+            return canon[new_labels]
+
+        return dataclasses.replace(wcc_algorithm(), init=init,
+                                   extract=extract)
+
+
+def run_wcc(engine: Engine, hg: HybridGraph) -> tuple[np.ndarray, Metrics]:
+    """Deprecated: use ``GraphSession.run(WCC())``.
+
+    Returns component labels indexed by ORIGINAL vertex id. Thin
+    delegate onto the query path — verified bit-identical.
     """
-    label0 = np.arange(engine.V, dtype=np.int32)
-    front0 = np.ones(engine.V, dtype=bool)  # all vertices start active
-    state, metrics, _ = engine.run(wcc_algorithm(), front0,
-                                   {"label": label0})
-    new_labels = np.asarray(state["label"])[hg.v2id]  # per original vertex
-    # canonicalize: map each reordered-label to the min original id with it
-    canon = np.full(engine.V, np.iinfo(np.int64).max, dtype=np.int64)
-    np.minimum.at(canon, new_labels, np.arange(hg.orig_num_vertices))
-    return canon[new_labels], metrics
+    from repro.core.session import GraphSession
+
+    warnings.warn("run_wcc is deprecated; use GraphSession.run(WCC())",
+                  DeprecationWarning, stacklevel=2)
+    del hg
+    res = GraphSession.from_engine(engine).run(WCC())
+    return res.result, res.metrics

@@ -22,16 +22,69 @@ An :class:`Algorithm` bundles:
   * ``activated``    activation predicate from (old, new) key values —
                      the batched equivalent of ``propagation`` returning a
                      positive priority (Alg. 1 lines 13-15),
-  * ``priority``     per-vertex scheduling priority (higher = sooner).
+  * ``priority``     per-vertex scheduling priority (higher = sooner),
+  * ``init``         builds the initial ``(frontier, state)`` from an
+                     :class:`AlgoContext` — the algorithm owns its setup
+                     instead of callers poking at engine internals,
+  * ``extract``      reads the converged state back out in ORIGINAL
+                     vertex ids (the user-facing result domain).
+
+A self-describing Algorithm (``init`` + ``extract`` present) can be run
+end-to-end by :class:`~repro.core.session.GraphSession`; user code
+constructs a :class:`Query` object (``BFS(source)``, ``WCC()``, ...)
+and never touches frontiers, reordered ids, or degree tables.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable
 
 import jax.numpy as jnp
+import numpy as np
 
 StateT = dict  # str -> jnp.ndarray of shape [V'] (+ scalars)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoContext:
+    """Everything an algorithm needs to set up and read out a run.
+
+    All arrays live in the *engine* vertex domain (reordered entities
+    followed by mini vertices, size ``V``); ``v2id`` maps original
+    vertex ids into that domain so ``extract`` hooks can return results
+    indexed by original id. Built by ``GraphSession`` from the engine's
+    tables — user code never reads ``engine.V`` / ``hg.v2id`` directly.
+    """
+
+    V: int                       # engine vertex-domain size (incl. virtual)
+    degrees: np.ndarray          # int32[V] out-degree (0 for virtual)
+    is_real: np.ndarray          # bool[V]  False for virtual duplicates
+    v2id: np.ndarray             # int64[orig_num_vertices] -> engine id
+    orig_num_vertices: int       # |V| of the input graph
+
+    def engine_id(self, vertex: int) -> int:
+        """Map an ORIGINAL vertex id to its engine id (asserts real)."""
+        vid = int(self.v2id[vertex])
+        assert vid >= 0, f"vertex {vertex} has no engine id"
+        return vid
+
+
+class Query:
+    """A first-class, reusable description of one graph computation.
+
+    Subclasses (``BFS``, ``PPR``, ``WCC``, ...) are small frozen
+    dataclasses holding user parameters; :meth:`build` turns them into a
+    self-describing :class:`Algorithm` (init/extract hooks bound over
+    the parameters). ``GraphSession.run(query)`` drives the default
+    single-pass :meth:`execute`; multi-pass queries with host barriers
+    (``MIS``) override ``execute`` instead.
+    """
+
+    def build(self) -> "Algorithm":
+        raise NotImplementedError
+
+    def execute(self, session) -> Any:  # -> repro.core.session.RunResult
+        return session._run_spec(self, self.build())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +111,13 @@ class Algorithm:
     #: cache keys on ``(name, params, cfg)``, so omitting a parameter
     #: silently reuses another instance's compiled tick
     params: tuple = ()
+    #: (ctx) -> (frontier bool[V], state dict) — algorithm-owned setup.
+    #: Pure host-side numpy; does NOT affect the compiled tick, so it is
+    #: deliberately outside the compile-cache key (queries differing
+    #: only in init data, e.g. BFS sources, share one compilation)
+    init: Callable[[AlgoContext], tuple[np.ndarray, StateT]] | None = None
+    #: (state, ctx) -> user-facing result in ORIGINAL vertex ids
+    extract: Callable[[StateT, AlgoContext], Any] | None = None
 
     def neutral(self, dtype) -> jnp.ndarray:
         if self.combine == "min":

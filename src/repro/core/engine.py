@@ -14,7 +14,7 @@ architecture (Sec. 4.1):
 
   * :class:`~repro.core.scheduler.Scheduler` — block-state transitions,
     the preload priority queue, and pluggable cached-queue pull policies
-    (``fifo`` / ``priority`` / ``lru``);
+    (``fifo`` / ``priority`` / ``lru`` / ``hybrid``);
   * :class:`~repro.core.pool.BufferPool` — slot accounting (admission,
     release, early-stop reuse eviction);
   * :class:`~repro.core.executor.ExecutorBackend` — batched
@@ -98,6 +98,7 @@ class EngineConfig:
     pool_slots: int = 64        # buffer pool capacity in 4 KB units
     chunk_size: int = 256       # mini-vertex pseudo-block width
     cached_policy: str = "fifo"  # 'fifo' (paper) | 'priority' | 'lru'
+    #                             | 'hybrid' (cost-aware priority x span)
     executor: str = "gather"    # 'gather' | 'pallas' (frontier_relax kernel)
     sync: bool = False          # Sec. 4.3 synchronous special case
     early_stop: int = 0         # consecutive-reuse eviction threshold (0=off)
@@ -144,7 +145,11 @@ class Metrics:
 class Engine:
     """Executable model of ACGraph over a :class:`HybridGraph`."""
 
-    def __init__(self, hg: HybridGraph, cfg: EngineConfig = EngineConfig()):
+    def __init__(self, hg: HybridGraph, cfg: EngineConfig | None = None):
+        # None-sentinel: a shared default EngineConfig() instance in the
+        # signature would be one mutable-adjacent object aliased across
+        # every default-constructed Engine
+        cfg = EngineConfig() if cfg is None else cfg
         self.hg = hg
         self.cfg = cfg
         self._build_tables()
@@ -421,12 +426,21 @@ def foreach_vertex_frontier(priority: np.ndarray) -> np.ndarray:
 
 
 def asyncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
-    """Process the worklist until convergence (paper Eqn. 2)."""
+    """Process the worklist until convergence (paper Eqn. 2).
+
+    .. deprecated:: use :meth:`repro.core.session.GraphSession.run` with
+       a query object; kept as a verified bit-identical delegate.
+    """
     assert not engine.cfg.sync
     return engine.run(algo, init_frontier, init_state)
 
 
 def syncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
-    """Synchronous special case: fresh worklist per iteration (Sec. 4.3)."""
+    """Synchronous special case: fresh worklist per iteration (Sec. 4.3).
+
+    .. deprecated:: use :meth:`repro.core.session.GraphSession.run` with
+       a query object on a ``sync=True`` config; kept as a verified
+       bit-identical delegate.
+    """
     assert engine.cfg.sync
     return engine.run(algo, init_frontier, init_state)

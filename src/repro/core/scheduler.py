@@ -12,9 +12,9 @@ This module owns the per-block control plane of the engine tick:
     priority, bounded by the io_uring-style queue depth; capacity
     admission is delegated to the :class:`~repro.core.pool.BufferPool`),
   * the cached-queue *pull* step behind a small policy protocol
-    (:class:`PullPolicy`) — ``fifo`` (paper default), ``priority``, and
-    ``lru`` are provided and new policies register via
-    :data:`CACHED_POLICIES`,
+    (:class:`PullPolicy`) — ``fifo`` (paper default), ``priority``,
+    ``lru``, and the cost-aware ``hybrid`` (priority × span) are
+    provided and new policies register via :data:`CACHED_POLICIES`,
   * finish/reactivation/eviction transitions after execution, activation
     of newly woken blocks, and the Sec. 4.3 synchronous barrier.
 
@@ -49,6 +49,10 @@ class PullView:
     b_prio: jnp.ndarray    # worklist priority (max active-vertex priority)
     b_used: jnp.ndarray    # tick the block was last pulled (0 = never)
     t: jnp.ndarray         # current tick
+    #: per-block I/O span in 4 KB slots (0 = memory-resident mini block);
+    #: filled in by :meth:`Scheduler.pull` from its block table when the
+    #: caller leaves it None
+    b_span: jnp.ndarray | None = None
 
 
 class PullPolicy:
@@ -89,8 +93,41 @@ class LruPolicy(PullPolicy):
         return jnp.where(ready, -view.b_used, NEG_INF)
 
 
+class HybridPolicy(PullPolicy):
+    """Cost-aware: worklist priority × block span.
+
+    Pure ``priority`` loses to ``fifo`` on PPR at fast devices: it keeps
+    draining small high-residual hub blocks, so each pull retires few
+    slots and the preload queue starves behind the pool. Weighting the
+    priority by the block's I/O span favors blocks whose execution
+    amortizes the most buffered I/O per pull — at fast devices this
+    behaves closer to throughput-ordered fifo, while on slow devices
+    the priority factor still dominates (the regime where priority wins,
+    see ``bench_device_sweep.py``).
+
+    Priorities are algorithm-defined and may be negative (BFS uses
+    ``-dis``, WCC ``-label``), where a raw product would *invert* the
+    span preference; scores therefore rebase priority to >= 1 against
+    the minimum over ready blocks before scaling by span, keeping the
+    key monotone in both factors. Scores are float32 (int32 priority ×
+    span overflows) and always >= 1 for ready blocks, so the engine's
+    ``key > NEG_INF`` validity test is safe by construction.
+    """
+
+    name = "hybrid"
+
+    def key(self, ready, view):
+        span = jnp.maximum(view.b_span, 1).astype(jnp.float32)
+        prio = view.b_prio.astype(jnp.float32)
+        pmin = jnp.min(jnp.where(ready, prio, jnp.inf))
+        pmin = jnp.where(jnp.isfinite(pmin), pmin, 0.0)
+        score = (prio - pmin + 1.0) * span
+        return jnp.where(ready, score, jnp.float32(NEG_INF))
+
+
 CACHED_POLICIES: dict[str, type[PullPolicy]] = {
-    p.name: p for p in (FifoPolicy, PriorityPolicy, LruPolicy)
+    p.name: p for p in (FifoPolicy, PriorityPolicy, LruPolicy,
+                        HybridPolicy)
 }
 
 
@@ -219,6 +256,8 @@ class Scheduler:
         Returns ``(eidx, lane_valid, b_used')`` where ``b_used`` records
         the pull tick for the LRU policy.
         """
+        if view.b_span is None:
+            view = dataclasses.replace(view, b_span=self.block_io)
         ready = (b_state == S_CACHED) & (b_nactive > 0)
         ekey = self.policy.key(ready, view)
         _, eidx = jax.lax.top_k(ekey, self.E)

@@ -1,0 +1,162 @@
+"""GraphSession: the single stable query surface over the engine.
+
+The paper's user API (Sec. 4.6) is ``foreachVertex`` + ``asyncRun`` /
+``syncRun``; systems like GraphMP and GraphD keep the vertex-program /
+runner split behind one engine facade so user code never handles
+frontiers, reordered vertex ids, or engine tables. ``GraphSession`` is
+that facade here:
+
+    session = GraphSession(graph, EngineConfig(pool_slots=64))
+    res = session.run(BFS(source=0))          # -> RunResult
+    res.result                                # distances, ORIGINAL ids
+    res.metrics.io_blocks                     # exact engine counters
+    res.modeled_runtime                       # SSD-model wall clock
+
+A session owns the :class:`~repro.core.engine.Engine` (and therefore its
+compile cache — ``run_many`` over queries with equal ``(name, params)``
+reuses one compiled tick), the tick-domain
+:class:`~repro.io_sim.device.DeviceModel` embedded in the config, and an
+attached :class:`~repro.io_sim.ssd_model.SSDModel` that converts the
+run's counters into ``RunResult.modeled_runtime``.
+
+Every run returns a :class:`RunResult` with a fixed shape — callers
+never branch on ``cfg.trace`` to learn a tuple arity, and never index
+``state`` by reordered ids: ``result`` is already in original vertex
+ids via the algorithm's ``extract`` hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.api import AlgoContext, Algorithm, Query
+from repro.core.engine import Engine, EngineConfig, Metrics
+from repro.io_sim.ssd_model import SSDModel
+from repro.storage.csr import CSRGraph
+from repro.storage.hybrid import HybridGraph, build_hybrid
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured result of one query run.
+
+    Replaces the ad-hoc per-wrapper tuple shapes (``(dis, m)`` vs
+    ``(state, metrics, trace)`` vs ``(p, r, metrics)``) with one spelling.
+    """
+
+    query: Query                  # the query object that produced this
+    result: Any                   # user-facing result, ORIGINAL vertex ids
+    state: dict                   # raw final vertex state (engine domain)
+    metrics: Metrics              # exact engine counters
+    trace: dict | None            # per-tick pipeline trace iff cfg.trace
+    modeled_runtime: float | None  # SSDModel wall-clock; None if no model
+    config: EngineConfig          # config this ran under (sweep provenance)
+
+
+class GraphSession:
+    """Owns one graph + engine and runs :class:`Query` objects on it."""
+
+    def __init__(self, graph: CSRGraph | HybridGraph,
+                 cfg: EngineConfig | None = None, *,
+                 ssd: SSDModel | None = None, delta_deg: int = 2,
+                 partitioner: str = "lplf", block_edges: int | None = None,
+                 _engine: Engine | None = None):
+        """``graph`` may be a raw :class:`CSRGraph` (partitioned here via
+        ``build_hybrid(delta_deg, partitioner, block_edges)``) or an
+        already-built :class:`HybridGraph` (the build kwargs are then
+        ignored). ``ssd`` attaches a performance model so every
+        :class:`RunResult` carries ``modeled_runtime``. ``_engine`` is
+        the :meth:`from_engine` adoption path."""
+        if _engine is not None:
+            self.hg = _engine.hg
+            self.engine = _engine
+        else:
+            if isinstance(graph, HybridGraph):
+                self.hg = graph
+            else:
+                kw = {} if block_edges is None \
+                    else {"block_edges": block_edges}
+                self.hg = build_hybrid(graph, delta_deg=delta_deg,
+                                       partitioner=partitioner, **kw)
+            self.engine = Engine(self.hg, cfg)
+        self.ssd = ssd
+        self._ctx: AlgoContext | None = None
+
+    @classmethod
+    def from_engine(cls, engine: Engine, *,
+                    ssd: SSDModel | None = None) -> "GraphSession":
+        """Wrap an existing engine (the deprecated ``run_*`` wrappers and
+        power users who hand-tune :class:`Engine` construction)."""
+        return cls(engine.hg, ssd=ssd, _engine=engine)
+
+    # ------------------------------------------------------------------
+    @property
+    def cfg(self) -> EngineConfig:
+        return self.engine.cfg
+
+    @property
+    def device(self):
+        """Tick-domain device model driving the I/O schedule."""
+        return self.engine.device
+
+    @property
+    def ctx(self) -> AlgoContext:
+        """The algorithm-facing view of this graph (built once)."""
+        if self._ctx is None:
+            eng = self.engine
+            self._ctx = AlgoContext(
+                V=eng.V,
+                degrees=np.asarray(eng.t_v_deg, dtype=np.int32),
+                is_real=np.asarray(eng.t_is_real),
+                v2id=self.hg.v2id,
+                orig_num_vertices=self.hg.orig_num_vertices)
+        return self._ctx
+
+    @property
+    def num_compiled(self) -> int:
+        """Compile-cache entries (one per distinct (name, params, cfg))."""
+        return len(self.engine._compiled)
+
+    # ------------------------------------------------------------------
+    def run(self, query: Query) -> RunResult:
+        """Execute one query to convergence."""
+        return query.execute(self)
+
+    def run_many(self, queries: Iterable[Query]) -> list[RunResult]:
+        """Run queries back-to-back on the shared engine: equal
+        ``(name, params)`` queries reuse one compiled tick."""
+        return [self.run(q) for q in queries]
+
+    def sweep(self, query: Query,
+              configs: Sequence[EngineConfig]) -> list[RunResult]:
+        """Benchmark-style config grid: run ``query`` once per config on
+        this session's graph (fresh engine per config; ``RunResult.config``
+        records which point each result belongs to)."""
+        out = []
+        for cfg in configs:
+            sub = GraphSession.from_engine(Engine(self.hg, cfg),
+                                           ssd=self.ssd)
+            out.append(sub.run(query))
+        return out
+
+    # ------------------------------------------------------------------
+    def _run_spec(self, query: Query, algo: Algorithm) -> RunResult:
+        """Single-pass execution of a self-describing Algorithm."""
+        assert algo.init is not None, \
+            f"algorithm {algo.name!r} has no init hook; use engine.run"
+        frontier, state = algo.init(self.ctx)
+        out_state, metrics, trace = self.engine.run(algo, frontier, state)
+        result = algo.extract(out_state, self.ctx) \
+            if algo.extract is not None else out_state
+        return self._wrap(query, result, out_state, metrics, trace)
+
+    def _wrap(self, query: Query, result, state: dict, metrics: Metrics,
+              trace: dict | None) -> RunResult:
+        """Assemble a RunResult (multi-pass queries call this directly)."""
+        modeled = self.ssd.modeled_runtime(metrics) \
+            if self.ssd is not None else None
+        return RunResult(query=query, result=result, state=state,
+                         metrics=metrics, trace=trace,
+                         modeled_runtime=modeled, config=self.engine.cfg)

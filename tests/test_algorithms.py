@@ -1,7 +1,15 @@
 """Integration tests: the five paper algorithms on the async engine vs
-pure-python oracles, in both async and sync (Sec. 4.3) modes."""
+pure-python oracles, in both async and sync (Sec. 4.3) modes.
+
+Deliberately stays on the deprecated ``run_*`` wrappers: this suite is
+the acceptance proof that the wrappers keep passing their pre-redesign
+tests after becoming delegates onto the query-object path (see
+``test_session_api.py`` for the new API and the bit-identity checks).
+"""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.algorithms import (run_bfs, run_kcore, run_mis, run_pagerank,
                               run_ppr, run_wcc)

@@ -4,12 +4,12 @@ and schedule sensitivity to device speed / queue depth."""
 import numpy as np
 
 from conftest import oracle_bfs, small_graph
-from repro.algorithms import run_bfs
-from repro.core.engine import Engine, EngineConfig
+from repro.algorithms import BFS
+from repro.core.engine import EngineConfig
+from repro.core.session import GraphSession
 from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import from_edges
-from repro.storage.hybrid import build_hybrid
 
 
 def _path_graph(n=12):
@@ -19,14 +19,15 @@ def _path_graph(n=12):
 
 
 def _run_bfs(g, **cfg_kw):
-    hg = build_hybrid(g, delta_deg=cfg_kw.pop("delta_deg", 2),
-                      block_edges=cfg_kw.pop("block_edges", 64))
+    delta_deg = cfg_kw.pop("delta_deg", 2)
+    block_edges = cfg_kw.pop("block_edges", 64)
     base = dict(lanes=2, prefetch=4, queue_depth=8, pool_slots=16,
                 chunk_size=16)
     base.update(cfg_kw)
-    eng = Engine(hg, EngineConfig(**base))
-    dis, m = run_bfs(eng, hg, 0)
-    return eng, dis, m
+    sess = GraphSession(g, EngineConfig(**base), delta_deg=delta_deg,
+                        block_edges=block_edges)
+    res = sess.run(BFS(0))
+    return sess.engine, res.result, res.metrics
 
 
 # ----------------------------------------------------------------------
@@ -52,24 +53,18 @@ def test_single_read_counts_all_inflight_ticks():
 
 
 def test_occupancy_trace_matches_counters():
-    from repro.algorithms.bfs import bfs_algorithm
-
     g = small_graph(n=200, m=1200, seed=3)
-    hg = build_hybrid(g, delta_deg=2, block_edges=64)
-    eng = Engine(hg, EngineConfig(lanes=2, prefetch=4, queue_depth=8,
-                                  pool_slots=16, chunk_size=16,
-                                  trace=True))
-    dis0 = np.full(eng.V, 2 ** 30, np.int32)
-    dis0[int(hg.v2id[0])] = 0
-    front0 = np.zeros(eng.V, bool)
-    front0[int(hg.v2id[0])] = True
-    _, m, trace = eng.run(bfs_algorithm(), front0, {"dis": dis0})
+    sess = GraphSession(
+        g, EngineConfig(lanes=2, prefetch=4, queue_depth=8, pool_slots=16,
+                        chunk_size=16, trace=True), block_edges=64)
+    res = sess.run(BFS(0))
+    m, trace = res.metrics, res.trace
     assert m.ticks == len(trace["inflight"])
     assert int(trace["io_active"].sum()) == m.io_active_ticks
     assert int(trace["inflight"].sum()) == m.inflight_ticks
     # occupancy never exceeds the submission queue depth
     assert int(trace["inflight"].max()) <= 8
-    assert int(trace["used_slots"].max()) <= eng.pool_slots
+    assert int(trace["used_slots"].max()) <= sess.engine.pool_slots
     assert int(trace["used_slots"].min()) >= 0
 
 

@@ -182,7 +182,7 @@ def _view(stamp, prio, used, t=10):
 
 
 def test_policy_registry_complete():
-    assert set(CACHED_POLICIES) == {"fifo", "priority", "lru"}
+    assert set(CACHED_POLICIES) == {"fifo", "priority", "lru", "hybrid"}
     with pytest.raises(ValueError, match="unknown cached_policy"):
         make_pull_policy("belady")
 
@@ -210,6 +210,47 @@ def test_lru_pulls_least_recently_executed_and_records_use():
         arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]), view)
     assert bool(lane_valid[0]) and int(eidx[0]) == 1
     assert int(b_used[1]) == 10  # t + 1, so "never pulled" (0) sorts first
+
+
+def test_hybrid_pulls_priority_times_span():
+    # priorities [5, 3, 4] rebased to >=1 against the ready-min (3) give
+    # [3, 1, 2]; x spans [1, 8, 2] -> scores [3, 8, 4]: the cost-aware
+    # policy picks the block amortizing the most span per pull
+    sched = make_sched(B=3, policy="hybrid", block_io=arr([1, 8, 2]),
+                       lanes=1)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]),
+        _view([0, 0, 0], [5, 3, 4], [0, 0, 0]))
+    assert bool(lane_valid[0]) and int(eidx[0]) == 1
+
+
+def test_hybrid_negative_priority_keeps_span_preference():
+    # BFS/WCC priorities are negative (-dis / -label): the rebase must
+    # keep 'bigger span wins at equal priority' instead of inverting it,
+    # and better priority must still beat equal-span worse priority
+    sched = make_sched(B=3, policy="hybrid", block_io=arr([1, 8, 8]),
+                       lanes=3)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([1, 1, 1]),
+        _view([0, 0, 0], [-5, -5, -7], [0, 0, 0]))
+    # rebase min is -7: scores (2+1)*1=3, (2+1)*8=24, (0+1)*8=8 —
+    # span breaks the [-5, -5] tie, and the large-span -7 block outranks
+    # the span-1 -5 block (span amortization outweighs a small priority
+    # gap — the multiplicative trade-off this policy is for)
+    assert np.asarray(lane_valid).all()
+    assert np.asarray(eidx).tolist() == [1, 2, 0]
+
+
+def test_hybrid_extreme_priority_stays_valid():
+    # extreme negative priority must not fall below the NEG_INF validity
+    # sentinel (ready scores are rebased >= 1 by construction)
+    sched = make_sched(B=2, policy="hybrid", block_io=arr([64, 1]),
+                       lanes=2)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED]), arr([1, 1]),
+        _view([0, 0], [NEG_INF + 1, 1], [0, 0]))
+    assert int(np.asarray(lane_valid).sum()) == 2  # both lanes valid
+    assert int(eidx[0]) == 1  # rebased high priority ranks first
 
 
 def test_pull_skips_blocks_without_work():

@@ -5,40 +5,41 @@ they are two implementations of the same apply/propagation contract."""
 import numpy as np
 import pytest
 
-from repro.algorithms import run_bfs, run_ppr, run_wcc
-from repro.core.engine import Engine, EngineConfig
+from repro.algorithms import BFS, PPR, WCC
+from repro.core.engine import EngineConfig
+from repro.core.session import GraphSession
 from repro.storage.csr import symmetrize
-from repro.storage.hybrid import build_hybrid
 from repro.storage.rmat import rmat_graph
 
 
-def _run_both(graph, fn, **cfg_kw):
-    hg = build_hybrid(graph, delta_deg=2, block_edges=64)
+def _run_both(graph, query, **cfg_kw):
     out = {}
     for ex in ("gather", "pallas"):
-        eng = Engine(hg, EngineConfig(lanes=4, prefetch=4, queue_depth=8,
-                                      pool_slots=24, chunk_size=64,
-                                      executor=ex, **cfg_kw))
-        out[ex] = fn(eng, hg)
+        sess = GraphSession(
+            graph, EngineConfig(lanes=4, prefetch=4, queue_depth=8,
+                                pool_slots=24, chunk_size=64,
+                                executor=ex, **cfg_kw),
+            block_edges=64)
+        out[ex] = sess.run(query)
     return out["gather"], out["pallas"]
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_bfs_parity(seed):
     g = rmat_graph(scale=9, avg_degree=8, seed=seed)
-    (dis_g, m_g), (dis_p, m_p) = _run_both(g, lambda e, h: run_bfs(e, h, 0))
-    assert np.array_equal(dis_g, dis_p)
-    assert m_g.edges_scanned == m_p.edges_scanned
-    assert m_g.vertices_processed == m_p.vertices_processed
+    rg, rp = _run_both(g, BFS(0))
+    assert np.array_equal(rg.result, rp.result)
+    assert rg.metrics.edges_scanned == rp.metrics.edges_scanned
+    assert rg.metrics.vertices_processed == rp.metrics.vertices_processed
 
 
 @pytest.mark.parametrize("seed", [0, 1])
 def test_wcc_parity(seed):
     g = symmetrize(rmat_graph(scale=9, avg_degree=8, seed=seed))
-    (lab_g, m_g), (lab_p, m_p) = _run_both(g, run_wcc)
-    assert np.array_equal(lab_g, lab_p)
-    assert m_g.edges_scanned == m_p.edges_scanned
-    assert m_g.vertices_processed == m_p.vertices_processed
+    rg, rp = _run_both(g, WCC())
+    assert np.array_equal(rg.result, rp.result)
+    assert rg.metrics.edges_scanned == rp.metrics.edges_scanned
+    assert rg.metrics.vertices_processed == rp.metrics.vertices_processed
 
 
 @pytest.mark.parametrize("seed", [0, 1])
@@ -46,26 +47,23 @@ def test_ppr_parity(seed):
     """f32 scatter-add: both backends emit the per-destination updates in
     the same relative order, so even floating-point state is identical."""
     g = rmat_graph(scale=9, avg_degree=8, seed=seed)
-    (p_g, m_g), (p_p, m_p) = _run_both(
-        g, lambda e, h: run_ppr(e, h, 2, r_max=1e-4))
-    assert np.array_equal(p_g, p_p)
-    assert m_g.edges_scanned == m_p.edges_scanned
-    assert m_g.vertices_processed == m_p.vertices_processed
+    rg, rp = _run_both(g, PPR(2, r_max=1e-4))
+    assert np.array_equal(rg.result, rp.result)
+    assert rg.metrics.edges_scanned == rp.metrics.edges_scanned
+    assert rg.metrics.vertices_processed == rp.metrics.vertices_processed
 
 
 def test_parity_under_sync_and_eviction():
     """Backends agree under the sync barrier and early-stop eviction too
     (the executor must not leak scheduling decisions)."""
     g = rmat_graph(scale=8, avg_degree=8, seed=3)
-    (dis_g, m_g), (dis_p, m_p) = _run_both(
-        g, lambda e, h: run_bfs(e, h, 0), sync=True, early_stop=2)
-    assert np.array_equal(dis_g, dis_p)
-    assert m_g.ticks == m_p.ticks
-    assert m_g.io_blocks == m_p.io_blocks
+    rg, rp = _run_both(g, BFS(0), sync=True, early_stop=2)
+    assert np.array_equal(rg.result, rp.result)
+    assert rg.metrics.ticks == rp.metrics.ticks
+    assert rg.metrics.io_blocks == rp.metrics.io_blocks
 
 
 def test_unknown_executor_rejected():
     g = rmat_graph(scale=7, avg_degree=6, seed=0)
-    hg = build_hybrid(g, delta_deg=2, block_edges=64)
     with pytest.raises(ValueError, match="unknown executor"):
-        Engine(hg, EngineConfig(executor="nope"))
+        GraphSession(g, EngineConfig(executor="nope"), block_edges=64)

@@ -3,6 +3,8 @@ accounting, hybrid-storage roundtrips, and scheduler conservation laws."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 

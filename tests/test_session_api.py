@@ -1,0 +1,256 @@
+"""The query-object API: GraphSession / query objects / RunResult.
+
+Covers the PR-3 acceptance criteria:
+
+  * old-vs-new parity — the deprecated ``run_*`` wrappers and
+    ``GraphSession.run(query)`` produce bit-identical final state and
+    identical Metrics (every counter) on the same graph/config,
+  * compile-cache sharing across ``run_many`` (equal (name, params)
+    queries -> one compiled tick; two-alpha PPR -> two),
+  * ``RunResult.modeled_runtime`` consistency with
+    ``SSDModel.modeled_runtime``,
+  * trace normalization (RunResult always carries ``trace``; callers
+    never branch on cfg.trace for arity),
+  * ``sweep`` config grids and the cost-aware ``hybrid`` pull policy
+    end-to-end.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import check_is_mis, oracle_bfs, oracle_kcore, small_graph
+from repro.algorithms import (BFS, KCore, MIS, PPR, PageRank, WCC,
+                              run_bfs, run_kcore, run_ppr, run_wcc)
+from repro.core.engine import Engine, EngineConfig
+from repro.core.session import GraphSession, RunResult
+from repro.io_sim.ssd_model import SSDModel
+from repro.storage.hybrid import build_hybrid
+
+CFG = dict(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
+           chunk_size=64)
+BLOCK_EDGES = 64
+
+
+def make_session(g, ssd=None, **cfg_kw):
+    kw = dict(CFG)
+    kw.update(cfg_kw)
+    return GraphSession(g, EngineConfig(**kw), ssd=ssd,
+                        block_edges=BLOCK_EDGES)
+
+
+def run_legacy(g, fn, *args, **cfg_kw):
+    """Run a deprecated wrapper on its own fresh engine."""
+    hg = build_hybrid(g, delta_deg=2, block_edges=BLOCK_EDGES)
+    kw = dict(CFG)
+    kw.update(cfg_kw)
+    eng = Engine(hg, EngineConfig(**kw))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(eng, hg, *args)
+
+
+def assert_bit_identical(res: RunResult, legacy_result, legacy_metrics):
+    """State + every Metrics counter must match exactly (no tolerance)."""
+    assert np.array_equal(res.result, legacy_result)
+    assert res.result.dtype == legacy_result.dtype
+    assert res.metrics == legacy_metrics  # dataclass eq: all counters
+
+
+# ----------------------------------------------------------------------
+# old-vs-new parity (acceptance criterion)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync", [False, True])
+def test_bfs_parity_old_new(sync):
+    g = small_graph(n=250, m=1500, seed=0)
+    res = make_session(g, sync=sync).run(BFS(3))
+    dis, m = run_legacy(g, run_bfs, 3, sync=sync)
+    assert_bit_identical(res, dis, m)
+    assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 3))
+
+
+def test_wcc_parity_old_new():
+    g = small_graph(n=300, m=900, seed=2, symmetric=True)
+    res = make_session(g).run(WCC())
+    labels, m = run_legacy(g, run_wcc)
+    assert_bit_identical(res, labels, m)
+
+
+def test_ppr_parity_old_new():
+    """Float state: still bit-identical — same compiled tick, same
+    reduction order."""
+    g = small_graph(n=200, m=1600, seed=4)
+    res = make_session(g).run(PPR(5, alpha=0.15, r_max=1e-4))
+    p, m = run_legacy(g, run_ppr, 5, 0.15, 1e-4)
+    assert_bit_identical(res, p, m)
+    # raw state rides along in the engine vertex domain
+    assert set(res.state) == {"p", "r"}
+    assert res.state["p"].shape[0] == res.state["r"].shape[0]
+
+
+def test_kcore_parity_old_new():
+    g = small_graph(n=250, m=2500, seed=3, symmetric=True)
+    res = make_session(g).run(KCore(5))
+    core, m = run_legacy(g, run_kcore, 5)
+    assert_bit_identical(res, core, m)
+    assert np.array_equal(res.result, oracle_kcore(g, 5))
+
+
+def test_wrappers_emit_deprecation_warning():
+    g = small_graph(n=60, m=200, seed=6)
+    hg = build_hybrid(g, delta_deg=2, block_edges=BLOCK_EDGES)
+    eng = Engine(hg, EngineConfig(**CFG))
+    with pytest.warns(DeprecationWarning, match="GraphSession"):
+        run_bfs(eng, hg, 0)
+
+
+# ----------------------------------------------------------------------
+# compile-cache sharing across run_many (acceptance criterion)
+# ----------------------------------------------------------------------
+
+def test_run_many_shares_compile_cache():
+    """Equal (name, params) queries must reuse one compiled tick even
+    when their init data (BFS source) differs."""
+    g = small_graph(n=150, m=900, seed=7)
+    sess = make_session(g)
+    results = sess.run_many([BFS(0), BFS(1), BFS(2)])
+    assert len(results) == 3
+    assert sess.num_compiled == 1
+    for res in results:
+        src = res.query.source
+        assert np.array_equal(res.result.astype(np.int64),
+                              oracle_bfs(g, src))
+
+
+def test_run_many_two_alpha_ppr_two_compiles():
+    """Distinct params (alpha) must NOT alias: two compile entries, and
+    the estimates must differ (the PR-2 cache-aliasing regression,
+    restated through the query API)."""
+    g = small_graph(n=200, m=1600, seed=4)
+    sess = make_session(g)
+    r1, r2, r3 = sess.run_many([PPR(5, alpha=0.15, r_max=1e-4),
+                                PPR(5, alpha=0.6, r_max=1e-4),
+                                PPR(5, alpha=0.15, r_max=1e-4)])
+    assert sess.num_compiled == 2
+    assert not np.array_equal(r1.result, r2.result)
+    assert np.array_equal(r1.result, r3.result)  # same query -> same run
+
+
+# ----------------------------------------------------------------------
+# modeled runtime + trace normalization (acceptance criteria)
+# ----------------------------------------------------------------------
+
+def test_modeled_runtime_matches_ssd_model():
+    g = small_graph(n=200, m=1200, seed=8)
+    model = SSDModel(bandwidth_gbps=3.0, lanes=2)
+    res = make_session(g, ssd=model).run(BFS(0))
+    assert res.modeled_runtime == model.modeled_runtime(res.metrics)
+    assert res.modeled_runtime > 0
+
+
+def test_no_ssd_model_means_none():
+    g = small_graph(n=100, m=400, seed=9)
+    res = make_session(g).run(BFS(0))
+    assert res.modeled_runtime is None
+
+
+def test_trace_field_is_always_present():
+    """RunResult has a fixed shape: ``trace`` is None without cfg.trace
+    and a per-tick dict with it — callers never branch on arity."""
+    g = small_graph(n=150, m=800, seed=10)
+    res_off = make_session(g, trace=False).run(BFS(0))
+    assert res_off.trace is None
+    res_on = make_session(g, trace=True).run(BFS(0))
+    assert isinstance(res_on.trace, dict)
+    assert len(res_on.trace["inflight"]) == res_on.metrics.ticks
+    # identical schedule either way
+    assert res_on.metrics == res_off.metrics
+
+
+# ----------------------------------------------------------------------
+# sweep / sessions / misc
+# ----------------------------------------------------------------------
+
+def test_sweep_runs_config_grid():
+    g = small_graph(n=250, m=1500, seed=11)
+    sess = make_session(g)
+    base = dict(CFG)
+    configs = [EngineConfig(**{**base, "queue_depth": qd})
+               for qd in (1, 4, 16)]
+    results = sess.sweep(BFS(0), configs)
+    assert [r.config.queue_depth for r in results] == [1, 4, 16]
+    want = oracle_bfs(g, 0)
+    for r in results:
+        assert np.array_equal(r.result.astype(np.int64), want)
+    # the grid engines are independent of the session's own engine
+    assert sess.num_compiled == 0
+
+
+def test_session_accepts_prebuilt_hybrid_graph():
+    g = small_graph(n=120, m=700, seed=12)
+    hg = build_hybrid(g, delta_deg=2, block_edges=BLOCK_EDGES)
+    sess = GraphSession(hg, EngineConfig(**CFG))
+    assert sess.hg is hg
+    res = sess.run(BFS(0))
+    assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
+
+
+def test_engine_default_config_not_shared():
+    """None-sentinel regression: default-constructed engines must not
+    alias one EngineConfig instance from the signature."""
+    g = small_graph(n=60, m=200, seed=13)
+    hg = build_hybrid(g, delta_deg=2, block_edges=BLOCK_EDGES)
+    e1, e2 = Engine(hg), Engine(hg)
+    assert e1.cfg == EngineConfig()
+    assert e1.cfg is not e2.cfg
+
+
+def test_mis_query_valid_and_metrics_summed():
+    g = small_graph(n=200, m=800, seed=6, symmetric=True)
+    res = make_session(g).run(MIS(seed=0))
+    check_is_mis(g, res.result)
+    assert res.metrics.barriers == 0  # phases barrier at the host level
+    assert res.metrics.ticks > 0
+    assert res.trace is None
+
+
+def test_mis_trace_contract_multi_pass():
+    """Multi-pass queries keep the trace contract: a dict iff cfg.trace,
+    nesting one per-tick trace per engine pass."""
+    g = small_graph(n=120, m=500, seed=6, symmetric=True)
+    res = make_session(g, trace=True).run(MIS(seed=0))
+    phases = res.trace["phases"]
+    assert len(phases) >= 2 and len(phases) % 2 == 0  # 2 per round
+    assert all("inflight" in p for p in phases)
+
+
+def test_pagerank_query_mass_conserved():
+    g = small_graph(n=150, m=1200, seed=5)
+    res = make_session(g).run(PageRank(r_max=1e-5))
+    assert res.result.sum() <= 1.0 + 1e-5
+    assert res.result.sum() > 0.3
+
+
+def test_hybrid_policy_end_to_end():
+    """The cost-aware hybrid pull policy converges to the same answers
+    (scheduling must never change results, only the schedule)."""
+    g = small_graph(n=250, m=1500, seed=14)
+    res = make_session(g, cached_policy="hybrid").run(BFS(0))
+    assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
+    gs = small_graph(n=200, m=1400, seed=15, symmetric=True)
+    res_f = make_session(gs, cached_policy="fifo").run(KCore(4))
+    res_h = make_session(gs, cached_policy="hybrid").run(KCore(4))
+    assert np.array_equal(res_f.result, res_h.result)
+
+
+def test_query_objects_are_frozen_and_reusable():
+    q = PPR(3, alpha=0.2, r_max=1e-4)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        q.alpha = 0.5
+    g = small_graph(n=120, m=700, seed=16)
+    r1 = make_session(g).run(q)
+    r2 = make_session(g).run(q)  # fresh session, same query object
+    assert np.array_equal(r1.result, r2.result)
+    assert r1.query is q and r2.query is q
