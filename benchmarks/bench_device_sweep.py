@@ -15,29 +15,38 @@ queues stretch the actual schedule. Reported per point:
     scheduler's relative advantage grows as the device slows (the
     I/O-bound regime rewards loading the right blocks first; on BFS the
     frontier is level-structured and fifo is already near-optimal).
-    The cost-aware ``hybrid`` policy (priority × span, the ROADMAP
-    follow-on) is swept alongside ``priority`` — its span weighting is
-    meant to close priority's gap to fifo at fast devices while keeping
-    the slow-device win.
+    The cost-aware ``hybrid`` policy — now fill-aware (priority ×
+    block fill, vertices+edges resident) so its cost signal survives
+    low-skew graphs where every span is 1 — is swept alongside
+    ``priority``, plus a dedicated low-skew (uniform) PPR point
+    demonstrating the fill signal.
 
-The grid runs through ``GraphSession.sweep`` — one hybrid-storage build
-per graph, a fresh engine per config point, ``RunResult.config``
-carrying the provenance.
-
-``REPRO_BENCH_SMOKE=1`` shrinks the grid for the tier-1 smoke path.
+``us_per_call`` is real measured wall clock per point (warm engine,
+best-of-2). ``REPRO_BENCH_SMOKE=1`` shrinks the grid for the tier-1
+smoke path.
 """
 from __future__ import annotations
 
 import os
 
-from benchmarks.common import bench_config, bench_graph, emit, make_session
+from benchmarks.common import (bench_config, bench_graph, emit,
+                               make_session, ssd, timeit_query)
 from repro.algorithms import BFS, PPR
+from repro.core.session import GraphSession
 from repro.io_sim.device import DeviceModel
+from repro.storage.rmat import uniform_graph
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 TPS = (1, 8)                                  # ticks per 4 KB slot
 QDS = (1, 8) if SMOKE else (1, 4, 16)         # queue depths
 POLICIES = ("fifo",) if SMOKE else ("fifo", "priority", "hybrid")
+
+
+def _timed_sweep(sess, query, configs):
+    """sess.sweep with warm per-point timing (fresh engine per config
+    via ``GraphSession.fork``, first run compiles, then best-of-2)."""
+    return [timeit_query(sess.fork(cfg), query, repeats=2)
+            for cfg in configs]
 
 
 def main() -> None:
@@ -52,13 +61,14 @@ def main() -> None:
                for tps, pol, qd in grid]
     ticks: dict[tuple, int] = {}
     occs: dict[tuple, float] = {}
-    for point, res in zip(grid, sess.sweep(BFS(0), configs)):
+    for point, (res, secs) in zip(grid, _timed_sweep(sess, BFS(0),
+                                                     configs)):
         tps, pol, qd = point
         m = res.metrics
         occ = model.queue_occupancy(m)
         ticks[point] = m.ticks
         occs[point] = occ
-        emit(f"device_tps{tps}_{pol}_qd{qd:02d}", 0.0,
+        emit(f"device_tps{tps}_{pol}_qd{qd:02d}", secs,
              f"ticks_{m.ticks}_occ_{occ:.2f}_ioactive_"
              f"{m.io_active_ticks}")
     for tps in TPS:
@@ -83,12 +93,30 @@ def main() -> None:
                                  device=DeviceModel(ticks_per_slot=tps),
                                  queue_depth=qd)
                     for pol in POLICIES]
+            # advantage rows only report tick ratios — plain sweep, no
+            # extra timed repeats
             t = {pol: r.metrics.ticks for pol, r in
                  zip(POLICIES, sess.sweep(PPR(0, r_max=1e-5), cfgs))}
             for pol in POLICIES[1:]:
                 adv = t["fifo"] / max(t[pol], 1)
                 emit(f"device_{pol}_advantage_ppr_tps{tps}_qd{qd:02d}",
                      0.0, f"{adv:.3f}x_fewer_ticks")
+        # fill-aware hybrid on a LOW-SKEW graph: every span is 1, so the
+        # old span-weighted score degenerated to pure priority; block
+        # fill keeps a cost signal (ROADMAP open item)
+        gu = uniform_graph(1 << 10, 16 << 10, seed=2)
+        su = GraphSession(gu, bench_config(pool_slots=24),
+                          block_edges=256, ssd=ssd())
+        cfgs = [bench_config(pool_slots=24, cached_policy=pol,
+                             device=DeviceModel(ticks_per_slot=8),
+                             queue_depth=qd)
+                for pol in POLICIES]
+        tu = {pol: r.metrics.ticks for pol, r in
+              zip(POLICIES, su.sweep(PPR(0, r_max=1e-5), cfgs))}
+        for pol in POLICIES[1:]:
+            adv = tu["fifo"] / max(tu[pol], 1)
+            emit(f"device_{pol}_advantage_ppr_uniform_tps8_qd{qd:02d}",
+                 0.0, f"{adv:.3f}x_fewer_ticks")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,13 @@
 """Paper Fig. 10: read inflation — average I/O bytes per accessed edge
 (theoretical minimum 4 bytes) for BFS and SSPPR, async vs sync.
+
+``us_per_call`` is real measured wall clock (warm-compiled, best-of-3),
+so ``BENCH_smoke.json`` tracks a perf trajectory alongside the exact
+I/O counters.
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, make_session
+from benchmarks.common import bench_graph, emit, make_session, timeit_query
 from repro.algorithms import BFS, PPR
 
 
@@ -12,8 +16,8 @@ def main() -> None:
     for name, query in (("bfs", BFS(0)), ("ssppr", PPR(0, r_max=1e-5))):
         for mode in ("async", "sync"):
             sess = make_session(g, sync=(mode == "sync"), pool_slots=48)
-            res = sess.run(query)
-            emit(f"fig10_{name}_{mode}", 0.0,
+            res, secs = timeit_query(sess, query)
+            emit(f"fig10_{name}_{mode}", secs,
                  f"{res.metrics.bytes_per_edge():.2f}_bytes_per_edge")
 
 

@@ -1,0 +1,64 @@
+"""Measured per-tick executor cost: degree skew × bucketed tiling.
+
+The tentpole claim of the skew-proof executor: per-tick wall-clock cost
+should be proportional to the blocks actually pulled, not the worst
+block in the graph. Global tiles pad every lane to the hub block's
+``(Vm, We, EK)``; with ``bucketing`` each lane routes to its own
+power-of-two size class. This sweep measures real us/tick (warm
+compile, best-of-2) for BFS and PPR over R-MAT graphs of increasing
+skew (the paper's Fig. 17 methodology) and a uniform low-skew control,
+with bucketing off vs on — and emits the off/on speedup ratio per
+point. Results are bit-identical either way; only the tile shapes
+change.
+
+``REPRO_BENCH_SCALE`` caps the graph (tier-1 smoke runs tiny graphs,
+where fixed op dispatch dominates and the ratio is noisy; run without
+the cap for the representative numbers reported in CHANGES.md).
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import bench_graph, emit, make_session, timeit_query
+from repro.algorithms import BFS, PPR
+from repro.storage.rmat import uniform_graph
+
+BUCKETS = 8
+#: smoke-capped graphs are too small for the ratio to mean anything —
+#: keep one skew point so the trajectory has a row, skip the rest
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+SKEWS = (0.75,) if SMOKE else (0.57, 0.75)
+
+
+def _point(tag, g, query):
+    out = {}
+    for bucketing in (0, BUCKETS):
+        sess = make_session(g, lanes=8, block_edges=256,
+                            bucketing=bucketing)
+        res, secs = timeit_query(sess, query, repeats=2)
+        per_tick = secs * 1e6 / max(res.metrics.ticks, 1)
+        out[bucketing] = per_tick
+        eng = sess.engine
+        emit(f"tick_cost_{tag}_bucketing{bucketing}", secs,
+             f"{per_tick:.1f}us_per_tick_ticks_{res.metrics.ticks}"
+             f"_tiles_{len(eng.tiles)}_We_{eng.We}")
+    emit(f"tick_cost_{tag}_speedup", 0.0,
+         f"{out[0] / max(out[BUCKETS], 1e-9):.2f}x_global_over_bucketed")
+
+
+def main() -> None:
+    for a in SKEWS:
+        g = bench_graph(scale=15, avg_degree=64, seed=0, a=a,
+                        b=(1 - a) / 2 - 0.02, c=(1 - a) / 2 - 0.02)
+        if not SMOKE:
+            _point(f"rmat_a{round(a * 100)}_bfs", g, BFS(0))
+        # PPR runs the most ticks -> least-noisy us/tick estimate, so it
+        # is the one row kept on the smoke path
+        _point(f"rmat_a{round(a * 100)}_ppr", g, PPR(0, r_max=1e-5))
+    if not SMOKE:
+        n = g.num_vertices  # matched |V| after the REPRO_BENCH_SCALE cap
+        _point("uniform_bfs", uniform_graph(n, n * 16, seed=1), BFS(0))
+
+
+if __name__ == "__main__":
+    main()

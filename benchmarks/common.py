@@ -28,14 +28,15 @@ RESULTS: list[dict] = []
 
 
 def bench_graph(scale: int = 12, avg_degree: int = 16, seed: int = 0,
-                symmetric: bool = False) -> CSRGraph:
+                symmetric: bool = False, **rmat_kw) -> CSRGraph:
     # REPRO_BENCH_SCALE caps every benchmark graph — tools/bench_smoke.py
     # uses it to turn the suite into a fast tier-1 smoke run
     try:
         scale = min(scale, int(os.environ["REPRO_BENCH_SCALE"]))
     except (KeyError, ValueError):
         pass
-    g = rmat_graph(scale=scale, avg_degree=avg_degree, seed=seed)
+    g = rmat_graph(scale=scale, avg_degree=avg_degree, seed=seed,
+                   **rmat_kw)
     return symmetrize(g) if symmetric else g
 
 
@@ -43,11 +44,13 @@ def bench_config(*, sync: bool = False, pool_slots: int = 64,
                  lanes: int = 4, trace: bool = False,
                  cached_policy: str = "fifo", executor: str = "gather",
                  chunk_size: int = 128, queue_depth: int = 16,
-                 device=None) -> EngineConfig:
+                 device=None, bucketing: int = 0,
+                 refresh: str = "incremental") -> EngineConfig:
     return EngineConfig(lanes=lanes, prefetch=8, queue_depth=queue_depth,
                         pool_slots=pool_slots, chunk_size=chunk_size,
                         sync=sync, trace=trace, cached_policy=cached_policy,
-                        executor=executor, device=device)
+                        executor=executor, device=device,
+                        bucketing=bucketing, refresh=refresh)
 
 
 def make_engine(g: CSRGraph, *, partitioner: str = "lplf",
@@ -83,3 +86,17 @@ def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
     return out, time.time() - t0
+
+
+def timeit_query(sess: GraphSession, query, repeats: int = 3):
+    """Measured wall clock for one query on a session: the first run
+    warms the compile cache, then best-of-``repeats`` (engine.run blocks
+    until the result is on host, so perf_counter brackets are honest).
+    Returns ``(last RunResult, best seconds)``."""
+    res = sess.run(query)
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        res = sess.run(query)
+        best = min(best, time.perf_counter() - t0)
+    return res, best

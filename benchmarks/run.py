@@ -29,6 +29,7 @@ MODULES = [
     ("fig16_executors", "benchmarks.bench_executors"),
     ("table2_partitioner", "benchmarks.bench_partitioner"),
     ("fig17_skew", "benchmarks.bench_skew"),
+    ("tick_cost_bucketing", "benchmarks.bench_tick_cost"),
 ]
 
 

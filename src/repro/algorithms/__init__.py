@@ -1,18 +1,14 @@
-"""Algorithm package: query objects (the stable API) + bare specs and
-deprecated ``run_*`` wrappers (verified bit-identical delegates)."""
-from repro.algorithms.bfs import BFS, bfs_algorithm, run_bfs
-from repro.algorithms.wcc import WCC, wcc_algorithm, run_wcc
-from repro.algorithms.kcore import KCore, kcore_algorithm, run_kcore
-from repro.algorithms.ppr import (PPR, PageRank, ppr_algorithm, run_ppr,
-                                  run_pagerank)
-from repro.algorithms.mis import MIS, run_mis
+"""Algorithm package: query objects (the stable API) + bare engine-facing
+specs for executor-level tests and power users."""
+from repro.algorithms.bfs import BFS, bfs_algorithm
+from repro.algorithms.wcc import WCC, wcc_algorithm
+from repro.algorithms.kcore import KCore, kcore_algorithm
+from repro.algorithms.ppr import PPR, PageRank, ppr_algorithm
+from repro.algorithms.mis import MIS
 
 __all__ = [
     # query objects — the supported user API
     "BFS", "WCC", "KCore", "PPR", "PageRank", "MIS",
     # bare engine-facing specs
     "bfs_algorithm", "wcc_algorithm", "kcore_algorithm", "ppr_algorithm",
-    # deprecated wrappers
-    "run_bfs", "run_wcc", "run_kcore", "run_ppr", "run_pagerank",
-    "run_mis",
 ]

@@ -8,19 +8,16 @@ paper's "vertex distance as the priority metric".
 
 ``BFS(source)`` is the query-object entry point
 (``session.run(BFS(0)).result`` = distances in ORIGINAL vertex ids,
-``INF32`` = unreached); ``run_bfs`` is the deprecated wrapper.
+``INF32`` = unreached).
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import AlgoContext, Algorithm, Query, StateT
-from repro.core.engine import Engine, Metrics
-from repro.storage.hybrid import HybridGraph
 
 INF32 = np.int32(2 ** 30)
 
@@ -64,19 +61,3 @@ class BFS(Query):
 
         return dataclasses.replace(bfs_algorithm(), init=init,
                                    extract=extract)
-
-
-def run_bfs(engine: Engine, hg: HybridGraph, source: int
-            ) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(BFS(source))``.
-
-    Returns distances indexed by ORIGINAL vertex id (INF = unreached).
-    Thin delegate onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn("run_bfs is deprecated; use GraphSession.run(BFS(source))",
-                  DeprecationWarning, stacklevel=2)
-    del hg  # the engine owns its HybridGraph
-    res = GraphSession.from_engine(engine).run(BFS(source))
-    return res.result, res.metrics

@@ -8,19 +8,16 @@ decrease monotonically — the same exactly-once guarantee the paper proves
 via fetchSub atomicity.
 
 Input graphs must be symmetrized. ``KCore(k)`` is the query-object entry
-point; ``run_kcore`` is the deprecated wrapper.
+point.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import AlgoContext, Algorithm, Query, StateT
-from repro.core.engine import Engine, Metrics
-from repro.storage.hybrid import HybridGraph
 
 
 def kcore_algorithm(k: int) -> Algorithm:
@@ -60,19 +57,3 @@ class KCore(Query):
 
         return dataclasses.replace(kcore_algorithm(k), init=init,
                                    extract=extract)
-
-
-def run_kcore(engine: Engine, hg: HybridGraph, k: int
-              ) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(KCore(k))``.
-
-    Returns bool[orig_num_vertices]: membership in the k-core. Thin
-    delegate onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn("run_kcore is deprecated; use GraphSession.run(KCore(k))",
-                  DeprecationWarning, stacklevel=2)
-    del hg
-    res = GraphSession.from_engine(engine).run(KCore(k))
-    return res.result, res.metrics

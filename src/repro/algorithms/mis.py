@@ -13,19 +13,17 @@ the paper's fixed-seed comparability setup.
 
 Input graphs must be symmetrized. ``MIS(seed)`` is the query-object
 entry point — it overrides ``Query.execute`` because of the host-level
-barrier loop; ``run_mis`` is the deprecated wrapper.
+barrier loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import Algorithm, Query
-from repro.core.engine import Engine, Metrics
-from repro.storage.hybrid import HybridGraph
+from repro.core.engine import Metrics
 
 INF32 = np.int32(2 ** 30)
 
@@ -98,19 +96,3 @@ class MIS(Query):
         return session._wrap(self, in_mis[ctx.v2id],
                              {"in_mis": in_mis, "label": label},
                              total, trace)
-
-
-def run_mis(engine: Engine, hg: HybridGraph, seed: int = 0
-            ) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(MIS(seed))``.
-
-    Returns bool[orig_num_vertices] MIS membership + summed metrics.
-    Thin delegate onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn("run_mis is deprecated; use GraphSession.run(MIS(seed))",
-                  DeprecationWarning, stacklevel=2)
-    del hg
-    res = GraphSession.from_engine(engine).run(MIS(seed=seed))
-    return res.result, res.metrics

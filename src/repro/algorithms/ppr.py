@@ -12,20 +12,16 @@ first accelerates convergence, the asynchronous analogue of prioritized
 sequential push.
 
 ``PPR(source, alpha, r_max)`` / ``PageRank(alpha, r_max)`` are the
-query-object entry points; ``run_ppr`` / ``run_pagerank`` are the
-deprecated wrappers.
+query-object entry points.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import AlgoContext, Algorithm, Query, StateT
-from repro.core.engine import Engine, Metrics
-from repro.storage.hybrid import HybridGraph
 
 
 def ppr_algorithm(alpha: float = 0.15, r_max: float = 1e-6) -> Algorithm:
@@ -108,38 +104,3 @@ class PageRank(Query):
             return r0
 
         return _push_spec(self.alpha, self.r_max, make_r0)
-
-
-def run_ppr(engine: Engine, hg: HybridGraph, source: int,
-            alpha: float = 0.15, r_max: float = 1e-6
-            ) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(PPR(source, alpha, r_max))``.
-
-    Returns PPR estimates p indexed by ORIGINAL vertex id. Thin delegate
-    onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn("run_ppr is deprecated; use GraphSession.run(PPR(...))",
-                  DeprecationWarning, stacklevel=2)
-    del hg
-    res = GraphSession.from_engine(engine).run(
-        PPR(source, alpha=alpha, r_max=r_max))
-    return res.result, res.metrics
-
-
-def run_pagerank(engine: Engine, hg: HybridGraph, alpha: float = 0.15,
-                 r_max: float = 1e-7) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(PageRank(alpha, r_max))``.
-
-    Thin delegate onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn(
-        "run_pagerank is deprecated; use GraphSession.run(PageRank(...))",
-        DeprecationWarning, stacklevel=2)
-    del hg
-    res = GraphSession.from_engine(engine).run(
-        PageRank(alpha=alpha, r_max=r_max))
-    return res.result, res.metrics

@@ -7,20 +7,16 @@ label are ultimately useful, so scheduling min-label blocks first avoids
 redundant edge accesses (Sec. 3.1 "Work Inflation").
 
 Input graphs must be symmetrized (undirected semantics), as in the paper's
-preprocessing. ``WCC()`` is the query-object entry point; ``run_wcc`` is
-the deprecated wrapper.
+preprocessing. ``WCC()`` is the query-object entry point.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import AlgoContext, Algorithm, Query, StateT
-from repro.core.engine import Engine, Metrics
-from repro.storage.hybrid import HybridGraph
 
 INF32 = np.int32(2 ** 30)
 
@@ -62,18 +58,3 @@ class WCC(Query):
 
         return dataclasses.replace(wcc_algorithm(), init=init,
                                    extract=extract)
-
-
-def run_wcc(engine: Engine, hg: HybridGraph) -> tuple[np.ndarray, Metrics]:
-    """Deprecated: use ``GraphSession.run(WCC())``.
-
-    Returns component labels indexed by ORIGINAL vertex id. Thin
-    delegate onto the query path — verified bit-identical.
-    """
-    from repro.core.session import GraphSession
-
-    warnings.warn("run_wcc is deprecated; use GraphSession.run(WCC())",
-                  DeprecationWarning, stacklevel=2)
-    del hg
-    res = GraphSession.from_engine(engine).run(WCC())
-    return res.result, res.metrics

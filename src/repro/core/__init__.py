@@ -2,11 +2,11 @@ from repro.core.block_state import (BlockState, Event, transition,
                                     TRANSITIONS)
 from repro.core.afs import AdaptiveFrontierSet
 from repro.core.api import AlgoContext, Algorithm, Query
-from repro.core.engine import (Engine, EngineConfig, Metrics, asyncRun,
-                               syncRun, foreach_vertex_frontier)
+from repro.core.engine import (Engine, EngineConfig, Metrics,
+                               foreach_vertex_frontier)
 from repro.core.executor import (EXECUTORS, ExecResult, ExecTables,
                                  ExecutorBackend, GatherExecutor,
-                                 PallasExecutor, make_executor)
+                                 PallasExecutor, Tile, make_executor)
 from repro.core.pool import BufferPool
 from repro.core.scheduler import (CACHED_POLICIES, FifoPolicy,
                                   HybridPolicy, LruPolicy, PriorityPolicy,
@@ -17,10 +17,11 @@ from repro.core.session import GraphSession, RunResult
 __all__ = [
     "BlockState", "Event", "transition", "TRANSITIONS",
     "AdaptiveFrontierSet", "Engine", "EngineConfig", "Metrics",
-    "asyncRun", "syncRun", "foreach_vertex_frontier",
+    "foreach_vertex_frontier",
     "AlgoContext", "Algorithm", "Query", "GraphSession", "RunResult",
     "EXECUTORS", "ExecResult", "ExecTables", "ExecutorBackend",
-    "GatherExecutor", "PallasExecutor", "make_executor", "BufferPool",
+    "GatherExecutor", "PallasExecutor", "Tile", "make_executor",
+    "BufferPool",
     "CACHED_POLICIES", "FifoPolicy", "HybridPolicy", "LruPolicy",
     "PriorityPolicy", "PullPolicy", "PullView", "Scheduler",
     "make_pull_policy",

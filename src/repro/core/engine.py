@@ -22,6 +22,24 @@ architecture (Sec. 4.1):
     ``pallas`` (the TPU-native ``frontier_relax`` kernel) produce
     identical results.
 
+Two exactness-preserving performance layers make per-tick cost
+proportional to the blocks actually pulled rather than the worst block
+in the graph (skew-proofing):
+
+  * **bucketed tiling** (``EngineConfig.bucketing``): scheduling blocks
+    partition into power-of-two size classes by vertex count and edge
+    mass; each pulled lane routes through ``lax.switch`` to its class's
+    ``(Vm, We, EK)`` tile instead of the global maxima — bit-identical
+    state and counters, compat default off;
+  * **incremental worklist refresh** (``EngineConfig.refresh``): the
+    per-block active counts and priorities are maintained from the
+    tick's lane windows (exact pulled-block rebuild + monotone
+    destination scatter-max + a ``lax.cond`` full-rebuild guard)
+    instead of re-reducing all V vertices twice per tick; sorted-order
+    prefix-sum/segmented-scan reductions replace XLA's serial-scatter
+    ``segment_*`` ops everywhere. ``check_refresh=True`` traces a
+    per-tick incremental-vs-full mismatch count (always zero).
+
 I/O time is *device-model-driven* (Sec. 4.5): at submit the
 :class:`~repro.io_sim.device.DeviceModel` assigns each block a completion
 deadline proportional to its span with bounded channel parallelism, so
@@ -57,11 +75,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import Algorithm
-from repro.core.executor import ExecTables, make_executor
+from repro.core.executor import ExecTables, Tile, make_executor
 from repro.core.pool import BufferPool
-from repro.core.scheduler import (NEG_INF, S_CACHED, S_INACTIVE, S_LOADING,
-                                  S_UNCACHED, PullView, Scheduler,
-                                  make_pull_policy)
+from repro.core.scheduler import (S_CACHED, S_LOADING, PullView,
+                                  Scheduler, make_pull_policy)
 from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.storage.hybrid import HybridGraph, mini_offset
 
@@ -106,6 +123,17 @@ class EngineConfig:
     device: DeviceModel | None = None  # span-proportional device time;
     #                             None = UniformDevice(io_latency), which
     #                             reproduces the pre-device schedule
+    bucketing: int = 0          # executor tile buckets: 0 = one global
+    #                             (Vm, We, EK) tile (compat default);
+    #                             N > 0 = at most N power-of-two block
+    #                             size classes with bucket-local tiles,
+    #                             bit-identical results
+    refresh: str = "incremental"  # worklist metadata maintenance:
+    #                             'incremental' (delta reductions +
+    #                             pulled-block rebuild, exact) | 'full'
+    #                             (re-reduce all V vertices per tick)
+    check_refresh: bool = False  # debug: per-tick incremental-vs-full
+    #                             comparison, traced as refresh_mismatch
     max_ticks: int = 200_000
     trace: bool = False         # record per-tick pipeline occupancy
 
@@ -150,6 +178,17 @@ class Engine:
         # signature would be one mutable-adjacent object aliased across
         # every default-constructed Engine
         cfg = EngineConfig() if cfg is None else cfg
+        if cfg.refresh not in ("incremental", "full"):
+            raise ValueError(
+                f"unknown refresh {cfg.refresh!r}; "
+                "available: ['full', 'incremental']")
+        if cfg.check_refresh and not (cfg.trace
+                                      and cfg.refresh == "incremental"):
+            raise ValueError(
+                "check_refresh=True records the per-tick incremental-vs-"
+                "full mismatch count into the trace; it requires "
+                "trace=True and refresh='incremental' (got "
+                f"trace={cfg.trace}, refresh={cfg.refresh!r})")
         self.hg = hg
         self.cfg = cfg
         self._build_tables()
@@ -157,17 +196,19 @@ class Engine:
                                early_stop=cfg.early_stop)
         self.device = cfg.device if cfg.device is not None \
             else UniformDevice(latency=cfg.io_latency)
+        tables = ExecTables(
+            all_edges=self.t_all_edges, v_start=self.t_v_start,
+            v_deg=self.t_v_deg, is_real=self.t_is_real,
+            sched_first=self.t_sched_first, V=self.V,
+            tiles=self.tiles, b_bucket=self.t_b_bucket)
         self.scheduler = Scheduler(
             block_io=self.t_sched_io, v_sched=self.t_v_sched,
             v_deg=self.t_v_deg, num_blocks=self.B, prefetch=self.P,
             lanes=self.E, queue_depth=cfg.queue_depth,
             device=self.device,
-            policy=make_pull_policy(cfg.cached_policy))
-        self.executor = make_executor(cfg.executor, ExecTables(
-            all_edges=self.t_all_edges, v_start=self.t_v_start,
-            v_deg=self.t_v_deg, is_real=self.t_is_real,
-            sched_first=self.t_sched_first, V=self.V, Vm=self.Vm,
-            We=self.We, EK=self.EK))
+            policy=make_pull_policy(cfg.cached_policy),
+            block_fill=self.t_b_fill, tables=tables)
+        self.executor = make_executor(cfg.executor, tables)
         self._compiled: dict[Any, Any] = {}
 
     # ------------------------------------------------------------------
@@ -224,7 +265,38 @@ class Engine:
         base_b = v_start[np.minimum(sched_first[:-1], max(V - 1, 0))]
         top_b = np.zeros(B, dtype=np.int64)
         np.maximum.at(top_b, v_sched, v_start + deg)
-        EK = int(max(np.maximum(top_b - base_b, 0).max(initial=1), 1))
+        win_b = np.maximum(top_b - base_b, 0)
+        EK = int(max(win_b.max(initial=1), 1))
+
+        # bucketed tiling: power-of-two size classes over (vertex count,
+        # edge mass, edge window) so one hub block stops inflating every
+        # lane's tile. Classes beyond the cap merge at the SMALL end —
+        # merged small blocks pad a little, hub classes stay isolated.
+        cnt_b = np.maximum(counts, 1)
+        we_b = np.maximum(tot_e.astype(np.int64), 1)
+        ek_b = np.maximum(win_b, 1)
+        nb = int(cfg.bucketing)
+        if nb > 0 and B > 1:
+            lvl = lambda x: np.ceil(np.log2(x)).astype(np.int64)
+            keys = list(zip(lvl(cnt_b).tolist(), lvl(we_b).tolist(),
+                            lvl(ek_b).tolist()))
+            classes = sorted(set(keys), key=lambda k: (sum(k), k))
+            extra = max(len(classes) - nb, 0)
+            group_of = {k: (0 if i <= extra else i - extra)
+                        for i, k in enumerate(classes)}
+            b_bucket = np.array([group_of[k] for k in keys],
+                                dtype=np.int32)
+            tiles = []
+            for g in range(len(classes) - extra):
+                m = b_bucket == g
+                tiles.append(Tile(Vm=int(cnt_b[m].max()),
+                                  We=int(we_b[m].max()),
+                                  EK=int(ek_b[m].max())))
+            self.tiles = tuple(tiles)
+        else:
+            b_bucket = np.zeros(B, dtype=np.int32)
+            self.tiles = (Tile(Vm=Vm, We=We, EK=EK),)
+        b_fill = np.minimum(counts + tot_e.astype(np.int64), 2 ** 31 - 1)
 
         self.V, self.B, self.NB = V, B, NB
         self.Vm, self.We, self.EK = Vm, We, EK
@@ -243,6 +315,8 @@ class Engine:
         self.t_is_real = jnp.asarray(~virt)
         self.t_sched_first = as_i32(sched_first)
         self.t_sched_io = as_i32(sched_io)
+        self.t_b_bucket = as_i32(b_bucket)
+        self.t_b_fill = as_i32(b_fill)
 
     # ------------------------------------------------------------------
     def run(self, algo: Algorithm, init_frontier: np.ndarray,
@@ -276,12 +350,15 @@ class Engine:
         sched, pool, executor = self.scheduler, self.pool, self.executor
         i32 = jnp.int32
 
+        incremental = cfg.refresh == "incremental"
+        check = cfg.check_refresh and incremental
         nact0, prio0 = sched.refresh(algo, state0, front0)
         b_state0 = sched.initial_block_state(nact0)
         counters0 = {k: _c64_zero() for k in _COUNTERS}
-        trace0 = {k: jnp.zeros(TRACE_LEN, i32)
-                  for k in ("io_blocks", "lanes", "edges", "frontier",
-                            "inflight", "io_active", "used_slots")} \
+        trace_keys = ("io_blocks", "lanes", "edges", "frontier",
+                      "inflight", "io_active", "used_slots") \
+            + (("refresh_mismatch",) if check else ())
+        trace0 = {k: jnp.zeros(TRACE_LEN, i32) for k in trace_keys} \
             if cfg.trace else {}
 
         carry0 = dict(
@@ -293,6 +370,9 @@ class Engine:
             b_nactive=nact0, b_prio=prio0,
             used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
             counters=counters0, trace=trace0)
+        if incremental:
+            carry0["v_prio"] = algo.priority(
+                state0, self.t_v_deg).astype(i32)
 
         def work_pending(c):
             return (jnp.any(c["front"]) | jnp.any(c["front_next"])
@@ -345,7 +425,21 @@ class Engine:
                 jnp.sum(res.activated & resident_v).astype(i32))
 
             # ---- 6. worklist metadata refresh ---------------------------
-            b_nactive2, b_prio2 = sched.refresh(algo, state, front2)
+            if incremental:
+                b_nactive2, b_prio2, v_prio2 = sched.refresh_delta(
+                    algo, state, front2, c["v_prio"], b_prio, eidx,
+                    lane_valid)
+            else:
+                b_nactive2, b_prio2 = sched.refresh(algo, state, front2)
+            if check:
+                # today the counts half is vacuous (refresh_delta rebuilds
+                # counts with refresh's own prefix-sum primitive); it is
+                # kept so the witness automatically covers counts the day
+                # they become genuinely incremental. The priorities half
+                # is the live comparison.
+                nact_f, prio_f = sched.refresh(algo, state, front2)
+                mismatch = (jnp.sum(nact_f != b_nactive2)
+                            + jnp.sum(prio_f != b_prio2)).astype(i32)
 
             # ---- 7. finish: reactivated blocks re-enter cached queue ----
             fin = sched.finish(b_state, b_stamp, c["b_reuse"], b_nactive2,
@@ -364,7 +458,7 @@ class Engine:
                 (front2, front_next, b_state, b_nactive2, b_prio2,
                  used_slots, barrier) = sched.barrier(
                     algo, state, front2, front_next, b_state, b_nactive2,
-                    b_prio2, used_slots, pool)
+                    b_prio2, used_slots, pool, lazy=incremental)
                 cnt["barriers"] = _c64_add(cnt["barriers"],
                                            barrier.astype(i32))
 
@@ -403,14 +497,20 @@ class Engine:
                     "used_slots": trace["used_slots"].at[ti].set(
                         used_slots),
                 }
+                if check:
+                    trace["refresh_mismatch"] = \
+                        c["trace"]["refresh_mismatch"].at[ti].set(mismatch)
 
-            return dict(state=state, front=front2, front_next=front_next,
-                        b_state=b_state, b_deadline=b_deadline,
-                        b_stamp=b_stamp,
-                        b_reuse=b_reuse, b_used=b_used,
-                        b_nactive=b_nactive2, b_prio=b_prio2,
-                        used_slots=used_slots, t=t + 1,
-                        counters=cnt, trace=trace)
+            out_c = dict(state=state, front=front2, front_next=front_next,
+                         b_state=b_state, b_deadline=b_deadline,
+                         b_stamp=b_stamp,
+                         b_reuse=b_reuse, b_used=b_used,
+                         b_nactive=b_nactive2, b_prio=b_prio2,
+                         used_slots=used_slots, t=t + 1,
+                         counters=cnt, trace=trace)
+            if incremental:
+                out_c["v_prio"] = v_prio2
+            return out_c
 
         out = jax.lax.while_loop(cond, tick, carry0)
         return out["state"], out["counters"], out["trace"]
@@ -423,24 +523,3 @@ class Engine:
 def foreach_vertex_frontier(priority: np.ndarray) -> np.ndarray:
     """``foreachVertex`` semantics: vertices with priority > 0 activate."""
     return np.asarray(priority) > 0
-
-
-def asyncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
-    """Process the worklist until convergence (paper Eqn. 2).
-
-    .. deprecated:: use :meth:`repro.core.session.GraphSession.run` with
-       a query object; kept as a verified bit-identical delegate.
-    """
-    assert not engine.cfg.sync
-    return engine.run(algo, init_frontier, init_state)
-
-
-def syncRun(engine: Engine, algo: Algorithm, init_frontier, init_state):
-    """Synchronous special case: fresh worklist per iteration (Sec. 4.3).
-
-    .. deprecated:: use :meth:`repro.core.session.GraphSession.run` with
-       a query object on a ``sync=True`` config; kept as a verified
-       bit-identical delegate.
-    """
-    assert engine.cfg.sync
-    return engine.run(algo, init_frontier, init_state)

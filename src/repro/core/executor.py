@@ -11,17 +11,31 @@ vertices_processed)`` results:
     gathered from the global edge array (XLA-native, the engine's
     original inner loop).
   * :class:`PallasExecutor` — drives the TPU-native
-    ``frontier_relax`` Pallas kernel per lane-batch: the expansion runs
-    as a one-hot membership matmul in VMEM over each lane's contiguous
-    edge window; the scatter-combine stays outside the kernel (TPU has
-    no efficient arbitrary scatter). Messages round-trip through f32
-    inside the kernel, exact for integer keys below 2**24 (graphs past
-    16M vertices should prefer the gather backend for int-keyed
+    ``frontier_relax`` Pallas kernel: the expansion runs as a one-hot
+    membership matmul in VMEM over each lane's contiguous edge window;
+    the scatter-combine stays outside the kernel (TPU has no efficient
+    arbitrary scatter). Messages round-trip through f32 inside the
+    kernel, exact for integer keys below 2**24 (graphs past 16M
+    vertices should prefer the gather backend for int-keyed
     algorithms).
 
 Both share the lane-window setup and the scatter-combine epilogue, so
 parity is structural: they differ only in how the per-edge ``(dst,
 value, valid)`` triples are materialized.
+
+**Bucketed tiling** (``EngineConfig.bucketing``): real graphs are
+skewed, so padding every lane to the *global* maxima ``(Vm, We, EK)``
+makes one hub block inflate every tick's expansion, scatter, and VMEM
+window. The engine partitions scheduling blocks into power-of-two size
+classes by vertex count and edge mass (:class:`Tile` per class,
+``b_bucket`` block -> class table); :meth:`ExecutorBackend.execute`
+routes each pulled lane through ``lax.switch`` to its own class, so the
+work *executed* per tick is the sum of the pulled blocks' tile sizes —
+not ``lanes x`` the worst block in the graph. Lanes run in lane-major
+order through the shared scatter-combine epilogue, which is exactly the
+single global tile's flat scatter order, so results (including
+floating-point ``add`` state) are bit-identical to the ``bucketing=0``
+compat default.
 
 New backends register via :data:`EXECUTORS`.
 """
@@ -37,6 +51,14 @@ from repro.kernels.ops import frontier_relax
 
 
 @dataclasses.dataclass(frozen=True)
+class Tile:
+    """Static executor tile sizes for one block size class."""
+    Vm: int                   # max vertices per member block
+    We: int                   # max total active edges per member (gather)
+    EK: int                   # max edge-window span per member (pallas)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExecTables:
     """Read-only engine tables an executor needs (built once per graph)."""
     all_edges: jnp.ndarray    # [total edge slots] int32 destinations
@@ -45,9 +67,8 @@ class ExecTables:
     is_real: jnp.ndarray      # [V] False for virtual vertices
     sched_first: jnp.ndarray  # [B+1] vertex-id range per scheduling block
     V: int                    # number of vertices (incl. virtual)
-    Vm: int                   # max vertices per scheduling block
-    We: int                   # max total active edges per block (gather)
-    EK: int                   # max edge-window span per block (pallas)
+    tiles: tuple[Tile, ...]   # one tile per occupied size class
+    b_bucket: jnp.ndarray     # [B] int32 block -> size class
 
 
 @dataclasses.dataclass
@@ -68,32 +89,47 @@ class ExecutorBackend:
         self.t = tables
 
     # ---- shared lane-window setup ------------------------------------
-    def _lane_windows(self, front, eidx, lane_valid):
+    def _lane_windows(self, front, eidx, lane_valid, tile: Tile):
         t = self.t
         i32 = jnp.int32
         first = t.sched_first[eidx]
         end = t.sched_first[eidx + 1]
-        vids = first[:, None] + jnp.arange(t.Vm, dtype=i32)[None, :]
-        inrange = vids < end[:, None]
+        vids = first[..., None] + jnp.arange(tile.Vm, dtype=i32)
+        inrange = vids < end[..., None]
         vids_c = jnp.minimum(vids, t.V - 1)
-        vmask = (inrange & lane_valid[:, None] & front[vids_c]
+        vmask = (inrange & lane_valid[..., None] & front[vids_c]
                  & t.is_real[vids_c])
         degs = jnp.where(vmask, t.v_deg[vids_c], 0)
         return first, vids_c, vmask, degs
 
     # ---- backend-specific expansion ----------------------------------
     def _expand(self, algo: Algorithm, first, vids_c, vmask, degs, msgs,
-                key_dtype):
+                key_dtype, tile: Tile):
         """-> (dstf, val, svalid): per-slot destination (V = sentinel),
         candidate value, and validity mask, any [lanes, W] layout."""
         raise NotImplementedError
 
+    def _combine(self, algo, ext, dstf, val, svalid):
+        if algo.combine == "min":
+            return ext.at[dstf.ravel()].min(val.ravel())
+        return ext.at[dstf.ravel()].add(
+            jnp.where(svalid, val, 0).ravel())
+
     # ---- the full apply / propagation step ---------------------------
     def execute(self, algo: Algorithm, state, front, eidx,
                 lane_valid) -> ExecResult:
+        if len(self.t.tiles) == 1:
+            return self._execute_batched(algo, state, front, eidx,
+                                         lane_valid, self.t.tiles[0])
+        return self._execute_bucketed(algo, state, front, eidx,
+                                      lane_valid)
+
+    def _execute_batched(self, algo, state, front, eidx, lane_valid,
+                         tile) -> ExecResult:
+        """Single global tile: all lanes expand as one batch."""
         t = self.t
         first, vids_c, vmask, degs = self._lane_windows(front, eidx,
-                                                        lane_valid)
+                                                        lane_valid, tile)
         msgs = algo.apply(state, vids_c, vmask, degs)
 
         processed = jnp.zeros(t.V, bool).at[vids_c.ravel()].max(
@@ -103,14 +139,10 @@ class ExecutorBackend:
         old_key = state[algo.key]
 
         dstf, val, svalid = self._expand(algo, first, vids_c, vmask, degs,
-                                         msgs, old_key.dtype)
+                                         msgs, old_key.dtype, tile)
         ext = jnp.concatenate([old_key,
                                algo.neutral(old_key.dtype)[None]])
-        if algo.combine == "min":
-            ext = ext.at[dstf.ravel()].min(val.ravel())
-        else:
-            ext = ext.at[dstf.ravel()].add(
-                jnp.where(svalid, val, 0).ravel())
+        ext = self._combine(algo, ext, dstf, val, svalid)
         new_key = ext[:t.V]
         activated = algo.activated(old_key, new_key, t.v_deg) & t.is_real
         state = dict(state)
@@ -120,21 +152,110 @@ class ExecutorBackend:
             edges_scanned=jnp.sum(degs).astype(jnp.int32),
             vertices_processed=jnp.sum(vmask).astype(jnp.int32))
 
+    def _execute_bucketed(self, algo, state, front, eidx,
+                          lane_valid) -> ExecResult:
+        """Per-lane ``lax.switch`` routing: each lane runs its block's
+        own size-class expansion, so executed work (expansion AND
+        scatter updates) is proportional to the blocks actually pulled.
+        Lane-major accumulation reproduces the batched path's flat
+        scatter order bit-for-bit.
+
+        Algorithms without ``on_process`` fuse window/scatter into one
+        pass per lane; with it (PPR residual consumption), a first pass
+        combines the processed mask before the state mutation, exactly
+        as in the batched path.
+        """
+        t = self.t
+        i32 = jnp.int32
+        E = eidx.shape[0]
+        lane_bucket = t.b_bucket[eidx]
+        cheapest = min(range(len(t.tiles)),
+                       key=lambda k: (t.tiles[k].Vm + t.tiles[k].We
+                                      + t.tiles[k].EK))
+        lane_k = jnp.where(lane_valid, lane_bucket, cheapest)
+        state_pre = state
+
+        # _lane_windows broadcasts over [..., None], so a scalar
+        # (eidx, lane_valid) pair yields this one lane's 1-D window —
+        # the same masking code as the batched path, not a copy
+
+        def mark_branch(tile):
+            def br(op):
+                processed, nedges, nverts, e, valid = op
+                _, vc, vmask, degs = self._lane_windows(front, e, valid,
+                                                        tile)
+                return (processed.at[vc].max(vmask),
+                        nedges + jnp.sum(degs).astype(i32),
+                        nverts + jnp.sum(vmask).astype(i32), e, valid)
+            return br
+
+        def scatter_branch(tile, key_dtype, fused):
+            def br(op):
+                ext, processed, nedges, nverts, e, valid = op
+                first, vc, vmask, degs = self._lane_windows(front, e,
+                                                            valid, tile)
+                msgs = algo.apply(state_pre, vc[None], vmask[None],
+                                  degs[None])
+                dstf, val, svalid = self._expand(
+                    algo, first[None], vc[None], vmask[None], degs[None],
+                    msgs, key_dtype, tile)
+                ext = self._combine(algo, ext, dstf, val, svalid)
+                if fused:
+                    processed = processed.at[vc].max(vmask)
+                    nedges = nedges + jnp.sum(degs).astype(i32)
+                    nverts = nverts + jnp.sum(vmask).astype(i32)
+                return ext, processed, nedges, nverts, e, valid
+            return br
+
+        def run_lanes(branches, op_rest):
+            for i in range(E):
+                op = tuple(op_rest) + (eidx[i], lane_valid[i])
+                if len(branches) == 1:
+                    out = branches[0](op)
+                else:
+                    out = jax.lax.switch(lane_k[i], branches, op)
+                op_rest = out[:-2]
+            return op_rest
+
+        processed = jnp.zeros(t.V, bool)
+        nedges = jnp.zeros((), i32)
+        nverts = jnp.zeros((), i32)
+        fused = algo.on_process is None
+        if not fused:
+            processed, nedges, nverts = run_lanes(
+                [mark_branch(tl) for tl in t.tiles],
+                (processed, nedges, nverts))
+            state = algo.on_process(state, processed)
+        old_key = state[algo.key]
+        ext = jnp.concatenate([old_key,
+                               algo.neutral(old_key.dtype)[None]])
+        ext, processed, nedges, nverts = run_lanes(
+            [scatter_branch(tl, old_key.dtype, fused) for tl in t.tiles],
+            (ext, processed, nedges, nverts))
+        new_key = ext[:t.V]
+        activated = algo.activated(old_key, new_key, t.v_deg) & t.is_real
+        state = dict(state)
+        state[algo.key] = new_key
+        return ExecResult(
+            state=state, processed=processed, activated=activated,
+            edges_scanned=nedges, vertices_processed=nverts)
+
 
 class GatherExecutor(ExecutorBackend):
     """Compact active-edge enumeration via searchsorted + global gather."""
 
     name = "gather"
 
-    def _expand(self, algo, first, vids_c, vmask, degs, msgs, key_dtype):
+    def _expand(self, algo, first, vids_c, vmask, degs, msgs, key_dtype,
+                tile):
         t = self.t
         i32 = jnp.int32
         cum_e = jnp.cumsum(degs, axis=1)
         tot = cum_e[:, -1]
-        slots = jnp.arange(t.We, dtype=i32)
+        slots = jnp.arange(tile.We, dtype=i32)
         owner = jax.vmap(
             lambda ce: jnp.searchsorted(ce, slots, side="right"))(cum_e)
-        owner_c = jnp.minimum(owner, t.Vm - 1).astype(i32)
+        owner_c = jnp.minimum(owner, tile.Vm - 1).astype(i32)
         prev = cum_e - degs
         within_e = slots[None, :] - jnp.take_along_axis(prev, owner_c,
                                                         axis=1)
@@ -157,11 +278,15 @@ class PallasExecutor(ExecutorBackend):
     messages onto those slots via an MXU membership matmul. Values are
     cast back to the key dtype and ``edge_value`` is applied outside the
     kernel, so algorithm semantics match the gather backend exactly.
+    Under bucketed tiling each lane invokes the kernel with its own size
+    class's ``(Vm_k, EK_k)`` tile, so hub blocks no longer size every
+    lane's VMEM window.
     """
 
     name = "pallas"
 
-    def _expand(self, algo, first, vids_c, vmask, degs, msgs, key_dtype):
+    def _expand(self, algo, first, vids_c, vmask, degs, msgs, key_dtype,
+                tile):
         t = self.t
         i32 = jnp.int32
         if jnp.issubdtype(key_dtype, jnp.integer) and t.V >= 2 ** 24:
@@ -172,7 +297,7 @@ class PallasExecutor(ExecutorBackend):
         base = t.v_start[jnp.minimum(first, t.V - 1)]
         starts_local = jnp.where(vmask, t.v_start[vids_c] - base[:, None],
                                  0).astype(i32)
-        slot_idx = base[:, None] + jnp.arange(t.EK, dtype=i32)[None, :]
+        slot_idx = base[:, None] + jnp.arange(tile.EK, dtype=i32)[None, :]
         slot_idx = jnp.clip(slot_idx, 0, t.all_edges.shape[0] - 1)
         edges_lane = t.all_edges[slot_idx]
         vals, valid = frontier_relax(

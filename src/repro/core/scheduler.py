@@ -13,8 +13,12 @@ This module owns the per-block control plane of the engine tick:
     admission is delegated to the :class:`~repro.core.pool.BufferPool`),
   * the cached-queue *pull* step behind a small policy protocol
     (:class:`PullPolicy`) — ``fifo`` (paper default), ``priority``,
-    ``lru``, and the cost-aware ``hybrid`` (priority × span) are
+    ``lru``, and the cost-aware ``hybrid`` (priority × block fill) are
     provided and new policies register via :data:`CACHED_POLICIES`,
+  * worklist metadata (per-block active counts and priorities), either
+    rebuilt from scratch every tick (:meth:`Scheduler.refresh`) or
+    maintained *incrementally* from the executor's lane windows
+    (:meth:`Scheduler.refresh_delta`) — exact, not approximate,
   * finish/reactivation/eviction transitions after execution, activation
     of newly woken blocks, and the Sec. 4.3 synchronous barrier.
 
@@ -53,6 +57,13 @@ class PullView:
     #: filled in by :meth:`Scheduler.pull` from its block table when the
     #: caller leaves it None
     b_span: jnp.ndarray | None = None
+    #: per-block *fill* — the static block size (vertices + edges it
+    #: holds, fixed at build time; NOT a live pool-residency measure):
+    #: the work one pull can amortize. Filled in by
+    #: :meth:`Scheduler.pull` when None. Unlike span (1 for every
+    #: non-giant block), fill varies on low-skew graphs too, so
+    #: fill-aware policies keep a signal there
+    b_fill: jnp.ndarray | None = None
 
 
 class PullPolicy:
@@ -94,34 +105,43 @@ class LruPolicy(PullPolicy):
 
 
 class HybridPolicy(PullPolicy):
-    """Cost-aware: worklist priority × block span.
+    """Cost-aware: worklist priority × block fill.
 
     Pure ``priority`` loses to ``fifo`` on PPR at fast devices: it keeps
     draining small high-residual hub blocks, so each pull retires few
     slots and the preload queue starves behind the pool. Weighting the
-    priority by the block's I/O span favors blocks whose execution
-    amortizes the most buffered I/O per pull — at fast devices this
-    behaves closer to throughput-ordered fifo, while on slow devices
-    the priority factor still dominates (the regime where priority wins,
-    see ``bench_device_sweep.py``).
+    priority by the block's *fill* (its static size in vertices + edges)
+    favors blocks whose execution amortizes the most buffered work per
+    pull —
+    at fast devices this behaves closer to throughput-ordered fifo,
+    while on slow devices the priority factor still dominates (the
+    regime where priority wins, see ``bench_device_sweep.py``).
+
+    Fill, not span: the I/O span only exceeds 1 at giant vertices
+    (deg > block_edges), so a span-weighted score degenerates to pure
+    ``priority`` on low-skew graphs. Fill varies across blocks on any
+    graph, keeping the cost signal alive (ROADMAP follow-on). When the
+    caller provides no fill table the span is used as the fallback
+    weight.
 
     Priorities are algorithm-defined and may be negative (BFS uses
     ``-dis``, WCC ``-label``), where a raw product would *invert* the
-    span preference; scores therefore rebase priority to >= 1 against
-    the minimum over ready blocks before scaling by span, keeping the
-    key monotone in both factors. Scores are float32 (int32 priority ×
-    span overflows) and always >= 1 for ready blocks, so the engine's
+    fill preference; scores therefore rebase priority to >= 1 against
+    the minimum over ready blocks before scaling, keeping the key
+    monotone in both factors. Scores are float32 (int32 priority × fill
+    overflows) and always >= 1 for ready blocks, so the engine's
     ``key > NEG_INF`` validity test is safe by construction.
     """
 
     name = "hybrid"
 
     def key(self, ready, view):
-        span = jnp.maximum(view.b_span, 1).astype(jnp.float32)
+        fill = view.b_fill if view.b_fill is not None else view.b_span
+        fill = jnp.maximum(fill, 1).astype(jnp.float32)
         prio = view.b_prio.astype(jnp.float32)
         pmin = jnp.min(jnp.where(ready, prio, jnp.inf))
         pmin = jnp.where(jnp.isfinite(pmin), pmin, 0.0)
-        score = (prio - pmin + 1.0) * span
+        score = (prio - pmin + 1.0) * fill
         return jnp.where(ready, score, jnp.float32(NEG_INF))
 
 
@@ -188,8 +208,10 @@ class Scheduler:
     def __init__(self, *, block_io: jnp.ndarray, v_sched: jnp.ndarray,
                  v_deg: jnp.ndarray, num_blocks: int, prefetch: int,
                  lanes: int, queue_depth: int, device: DeviceModel,
-                 policy: PullPolicy):
+                 policy: PullPolicy, block_fill: jnp.ndarray | None = None,
+                 tables=None):
         self.block_io = block_io
+        self.block_fill = block_fill
         self.v_sched = v_sched
         self.v_deg = v_deg
         self.B = int(num_blocks)
@@ -198,16 +220,171 @@ class Scheduler:
         self.queue_depth = int(queue_depth)
         self.device = device
         self.policy = policy
+        #: :class:`~repro.core.executor.ExecTables` — block windows for
+        #: the incremental refresh (None disables refresh_delta)
+        self.tables = tables
+        # v_sched is block-sorted by construction (entities in offset
+        # order, minis appended in chunk order); the worklist reductions
+        # below rely on it to avoid XLA's serial-scatter segment ops.
+        # Hard error (not assert): a violation silently mis-buckets
+        # every count/priority under python -O
+        vs = np.asarray(v_sched)
+        if not (np.diff(vs) >= 0).all():
+            raise ValueError(
+                "v_sched must be block-sorted (non-decreasing); the "
+                "prefix-sum/segmented-scan worklist reductions are only "
+                "exact over a block-contiguous vertex order")
+        vs_first = np.searchsorted(vs, np.arange(self.B + 1))
+        self._vs_first = jnp.asarray(vs_first, dtype=jnp.int32)
+        self._vs_nonempty = jnp.asarray(vs_first[1:] > vs_first[:-1])
+        self._seg_start = jnp.asarray(
+            np.concatenate([[True], vs[1:] != vs[:-1]]))
 
     # ---- worklist metadata -------------------------------------------
+    def _block_counts(self, front):
+        """segment_sum(front) over the block-sorted vertex order, as a
+        prefix-sum differenced at block boundaries (vectorized — 5-10x
+        faster than XLA's scatter-based segment_sum on CPU, identical
+        values)."""
+        s = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             jnp.cumsum(front.astype(jnp.int32))])
+        return s[self._vs_first[1:]] - s[self._vs_first[:-1]]
+
+    def _block_prio(self, front, v_prio):
+        """segment_max(where(front, v_prio, NEG_INF)) via a segmented
+        max scan over the block-sorted order — bit-identical values,
+        including the empty-block identity (int32 min)."""
+
+        def comb(a, b):
+            av, af = a
+            bv, bf = b
+            return jnp.where(bf, bv, jnp.maximum(av, bv)), af | bf
+
+        x = jnp.where(front, v_prio, NEG_INF)
+        scanned, _ = jax.lax.associative_scan(comb, (x, self._seg_start))
+        last = jnp.maximum(self._vs_first[1:] - 1, 0)
+        return jnp.where(self._vs_nonempty, scanned[last],
+                         jnp.iinfo(jnp.int32).min)
+
     def refresh(self, algo, state, front):
         """Per-block active counts and priorities (worklist metadata)."""
         v_prio = algo.priority(state, self.v_deg).astype(jnp.int32)
-        nact = jax.ops.segment_sum(front.astype(jnp.int32), self.v_sched,
-                                   num_segments=self.B)
-        prio = jax.ops.segment_max(jnp.where(front, v_prio, NEG_INF),
-                                   self.v_sched, num_segments=self.B)
-        return nact, prio
+        return self._block_counts(front), self._block_prio(front, v_prio)
+
+    def refresh_delta(self, algo, state, front_new, v_prio_old, b_prio,
+                      eidx, lane_valid):
+        """Incremental worklist refresh — exact, not approximate.
+
+        The full :meth:`refresh` re-reduces all V vertices into B blocks
+        every tick even when a handful of vertices changed. This
+        maintains the same metadata from the tick's per-lane windows
+        instead; every lane routes through its block's *bucket* tile
+        (``lax.switch``), so the work executed is proportional to the
+        blocks actually pulled, not the worst block in the graph:
+
+          * **counts** — the sorted-prefix-sum of :meth:`_block_counts`
+            (vectorized, no scatter);
+          * **priorities of pulled blocks** — a vertex can only *leave*
+            the frontier by being processed, and processed vertices live
+            in the pulled lanes' windows, which span each pulled block's
+            entire vertex range; the new block max is recomputed exactly
+            inside each lane's window (this also covers ``on_process``
+            state mutation, e.g. PPR residual consumption);
+          * **priorities of touched destinations** — all destinations a
+            lane's scatter touched lie in its block's contiguous edge
+            window; priorities move *up* elsewhere (activations,
+            residual adds), so an idempotent ``scatter-max`` of the
+            window's active destinations is exact. Extra window slots
+            (neighboring blocks' edges inside the tile) only ever
+            contribute a true priority of a true frontier vertex to its
+            own block — never above that block's max;
+          * **rebuild guard** — an active destination in a *non-pulled*
+            block whose priority moved *down* off its block's max
+            (possible only when ``priority`` depends on mutated non-key
+            state in a non-monotone way) cannot be fixed by a monotone
+            scatter-max; such ticks fall back to the full reduction
+            under ``lax.cond`` (never taken by the six stock
+            algorithms).
+
+        Contract: ``on_process`` may only modify rows of processed
+        vertices, and activation implies a key change (both hold for
+        every paper algorithm — they are the semantics of Alg. 1).
+
+        Returns ``(b_nactive', b_prio', v_prio')`` where ``v_prio'`` is
+        the per-vertex priority under the post-tick state (carried so
+        the next tick can detect downward moves without re-evaluating
+        the old state).
+        """
+        i32 = jnp.int32
+        imin = jnp.iinfo(jnp.int32).min
+        t = self.tables
+        V = int(self.v_sched.shape[0])
+        v_prio = algo.priority(state, self.v_deg).astype(i32)
+        nact2 = self._block_counts(front_new)
+        pulled = jnp.zeros(self.B, bool).at[eidx].max(lane_valid)
+
+        def lane_branch(tile):
+            def br(op):
+                prio2, e, valid = op
+                first = t.sched_first[e]
+                end = t.sched_first[e + 1]
+                vids = first + jnp.arange(tile.Vm, dtype=i32)
+                vc = jnp.minimum(vids, t.V - 1)
+                act = (vids < end) & valid & front_new[vc]
+                lm = jnp.max(jnp.where(act, v_prio[vc], NEG_INF))
+                prio2 = prio2.at[e].set(jnp.where(valid, lm, prio2[e]))
+                base = t.v_start[jnp.minimum(first, t.V - 1)]
+                slots = base + jnp.arange(tile.EK, dtype=i32)
+                dst = t.all_edges[
+                    jnp.clip(slots, 0, t.all_edges.shape[0] - 1)]
+                dvalid = valid & (dst >= 0)
+                dc = jnp.maximum(dst, 0)
+                db = self.v_sched[dc]
+                dmask = dvalid & front_new[dc]
+                # imin fill: a no-op even against an empty block's
+                # identity (which sits below NEG_INF)
+                prio2 = prio2.at[jnp.where(dvalid, db, 0)].max(
+                    jnp.where(dmask, v_prio[dc], imin))
+                drop = dmask & ~pulled[db] & (v_prio[dc] < v_prio_old[dc]) \
+                    & (v_prio_old[dc] == b_prio[db])
+                return prio2, jnp.any(drop)
+            return br
+
+        # a tile whose window rivals V costs more than the vectorized
+        # full reduction (scatter updates are ~an order of magnitude
+        # slower per element than a scan pass): lanes routed to such
+        # tiles trigger ONE exact full rebuild below instead — only on
+        # ticks that actually pull such a block
+        windowed = [(tile.Vm + 2 * tile.EK) * 6 <= V for tile in t.tiles]
+        lane_bucket = t.b_bucket[eidx]
+        prio2 = b_prio
+        any_drop = jnp.zeros((), bool)
+        need_full = jnp.zeros((), bool)
+        if not all(windowed):
+            is_wide = jnp.asarray([not w for w in windowed])
+            need_full = jnp.any(lane_valid & is_wide[lane_bucket])
+        if any(windowed):
+            cheapest = min(
+                (k for k in range(len(t.tiles)) if windowed[k]),
+                key=lambda k: t.tiles[k].Vm + t.tiles[k].EK)
+            branches = [lane_branch(tile) if w else lane_branch(
+                t.tiles[cheapest]) for tile, w in zip(t.tiles, windowed)]
+            use_window = jnp.asarray(np.array(windowed))
+            for i in range(eidx.shape[0]):
+                valid = lane_valid[i] & use_window[lane_bucket[i]]
+                op = (prio2, eidx[i], valid)
+                if len(branches) == 1:
+                    prio2, drop = branches[0](op)
+                else:
+                    k = jnp.where(valid, lane_bucket[i], cheapest)
+                    prio2, drop = jax.lax.switch(k, branches, op)
+                any_drop |= drop
+
+        prio2 = jax.lax.cond(
+            any_drop | need_full,
+            lambda p: self._block_prio(front_new, v_prio),
+            lambda p: p, prio2)
+        return nact2, prio2, v_prio
 
     def initial_block_state(self, nact: jnp.ndarray) -> jnp.ndarray:
         return jnp.where(nact > 0,
@@ -258,6 +435,8 @@ class Scheduler:
         """
         if view.b_span is None:
             view = dataclasses.replace(view, b_span=self.block_io)
+        if view.b_fill is None and self.block_fill is not None:
+            view = dataclasses.replace(view, b_fill=self.block_fill)
         ready = (b_state == S_CACHED) & (b_nactive > 0)
         ekey = self.policy.key(ready, view)
         _, eidx = jax.lax.top_k(ekey, self.E)
@@ -296,18 +475,28 @@ class Scheduler:
 
     # ---- stage 9: synchronous barrier (Sec. 4.3) ---------------------
     def barrier(self, algo, state, front2, front_next, b_state,
-                b_nactive2, b_prio2, used_slots, pool: BufferPool):
+                b_nactive2, b_prio2, used_slots, pool: BufferPool,
+                lazy: bool = False):
         """Swap in the next-iteration worklist once the current one and
         all in-flight I/O drain. Resident blocks with work stay; the rest
-        are released."""
+        are released. ``lazy`` computes the swapped worklist's metadata
+        under ``lax.cond`` — only on the (rare) barrier tick — instead
+        of reducing all V vertices every tick and discarding the result;
+        the selected values are identical either way."""
         inflight_now = jnp.any(b_state == S_LOADING)
         barrier = (~jnp.any(front2)) & (~inflight_now) \
             & jnp.any(front_next)
         front2 = jnp.where(barrier, front_next, front2)
         front_next = jnp.where(barrier, False, front_next)
-        nact_b, prio_b = self.refresh(algo, state, front2)
-        b_nactive2 = jnp.where(barrier, nact_b, b_nactive2)
-        b_prio2 = jnp.where(barrier, prio_b, b_prio2)
+        if lazy:
+            b_nactive2, b_prio2 = jax.lax.cond(
+                barrier,
+                lambda: self.refresh(algo, state, front2),
+                lambda: (b_nactive2, b_prio2))
+        else:
+            nact_b, prio_b = self.refresh(algo, state, front2)
+            b_nactive2 = jnp.where(barrier, nact_b, b_nactive2)
+            b_prio2 = jnp.where(barrier, prio_b, b_prio2)
         drop = barrier & (b_state == S_CACHED) & (b_nactive2 == 0)
         used_slots = pool.release(used_slots, drop)
         b_state = jnp.where(drop, S_INACTIVE, b_state)

@@ -87,8 +87,8 @@ class GraphSession:
     @classmethod
     def from_engine(cls, engine: Engine, *,
                     ssd: SSDModel | None = None) -> "GraphSession":
-        """Wrap an existing engine (the deprecated ``run_*`` wrappers and
-        power users who hand-tune :class:`Engine` construction)."""
+        """Wrap an existing engine (power users who hand-tune
+        :class:`Engine` construction)."""
         return cls(engine.hg, ssd=ssd, _engine=engine)
 
     # ------------------------------------------------------------------
@@ -129,17 +129,19 @@ class GraphSession:
         ``(name, params)`` queries reuse one compiled tick."""
         return [self.run(q) for q in queries]
 
+    def fork(self, cfg: EngineConfig) -> "GraphSession":
+        """Fresh engine over this session's (already-built) graph, same
+        attached SSD model — the unit of a config grid. ``sweep`` and
+        the benchmark harness's timed sweeps share this path."""
+        return GraphSession.from_engine(Engine(self.hg, cfg),
+                                        ssd=self.ssd)
+
     def sweep(self, query: Query,
               configs: Sequence[EngineConfig]) -> list[RunResult]:
         """Benchmark-style config grid: run ``query`` once per config on
         this session's graph (fresh engine per config; ``RunResult.config``
         records which point each result belongs to)."""
-        out = []
-        for cfg in configs:
-            sub = GraphSession.from_engine(Engine(self.hg, cfg),
-                                           ssd=self.ssd)
-            out.append(sub.run(query))
-        return out
+        return [self.fork(cfg).run(query) for cfg in configs]
 
     # ------------------------------------------------------------------
     def _run_spec(self, query: Query, algo: Algorithm) -> RunResult:

@@ -1,17 +1,17 @@
 """Hypothesis property tests on system invariants: the engine's metrics
-accounting, hybrid-storage roundtrips, and scheduler conservation laws."""
+accounting, hybrid-storage roundtrips, scheduler conservation laws, and
+the incremental-refresh / bucketed-tiling exactness guarantees."""
 import numpy as np
 import pytest
-
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.algorithms import run_bfs, run_wcc
+from repro.algorithms import BFS, WCC
 from repro.algorithms.bfs import bfs_algorithm
 from repro.algorithms.wcc import wcc_algorithm
 from repro.core.engine import Engine, EngineConfig
+from repro.core.session import GraphSession
 from repro.storage.csr import from_edges, symmetrize
 from repro.storage.hybrid import build_hybrid
 
@@ -38,9 +38,9 @@ def test_bfs_correct_on_random_graphs(g, pool, sync):
     eng = Engine(hg, EngineConfig(lanes=2, prefetch=2, queue_depth=4,
                                   pool_slots=pool, chunk_size=16,
                                   sync=sync))
-    dis, m = run_bfs(eng, hg, 0)
-    assert np.array_equal(dis.astype(np.int64), oracle_bfs(g, 0))
-    _check_metric_invariants(m, hg)
+    res = GraphSession.from_engine(eng).run(BFS(0))
+    assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
+    _check_metric_invariants(res.metrics, hg)
 
 
 @pytest.mark.slow
@@ -50,9 +50,9 @@ def test_wcc_correct_on_random_graphs(g):
     gs = symmetrize(g)
     hg = build_hybrid(gs, delta_deg=2, block_edges=32)
     eng = Engine(hg, EngineConfig(lanes=3, pool_slots=8, chunk_size=16))
-    labels, m = run_wcc(eng, hg)
-    assert np.array_equal(labels, oracle_wcc(gs))
-    _check_metric_invariants(m, hg)
+    res = GraphSession.from_engine(eng).run(WCC())
+    assert np.array_equal(res.result, oracle_wcc(gs))
+    _check_metric_invariants(res.metrics, hg)
 
 
 def _check_metric_invariants(m, hg):
@@ -131,7 +131,35 @@ def test_engine_deterministic(seed):
     for _ in range(2):
         eng = Engine(hg, EngineConfig(lanes=2, pool_slots=8,
                                       chunk_size=16))
-        dis, m = run_bfs(eng, hg, 0)
-        runs.append((dis.tolist(), m.io_blocks, m.ticks,
-                     m.edges_scanned))
+        res = GraphSession.from_engine(eng).run(BFS(0))
+        runs.append((res.result.tolist(), res.metrics.io_blocks,
+                     res.metrics.ticks, res.metrics.edges_scanned))
     assert runs[0] == runs[1]
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(random_graph(), st.sampled_from(["bfs", "wcc"]), st.booleans(),
+       st.sampled_from([0, 4]))
+def test_incremental_refresh_equals_full_every_tick(g, algo, sync,
+                                                    bucketing):
+    """The incremental worklist refresh must equal the full
+    ``segment_sum``/``segment_max`` refresh at EVERY tick, not just at
+    convergence: ``check_refresh=True`` recomputes the full reduction
+    per tick inside the loop and traces the number of mismatching
+    per-block values — which must be zero — and the end-to-end metrics
+    must match the ``refresh='full'`` schedule exactly."""
+    if algo == "wcc":
+        g = symmetrize(g)
+    query = BFS(0) if algo == "bfs" else WCC()
+    hg = build_hybrid(g, delta_deg=2, block_edges=32)
+    kw = dict(lanes=2, prefetch=3, queue_depth=4, pool_slots=8,
+              chunk_size=16, sync=sync, bucketing=bucketing)
+    checked = Engine(hg, EngineConfig(trace=True, check_refresh=True,
+                                      **kw))
+    res = GraphSession.from_engine(checked).run(query)
+    assert int(res.trace["refresh_mismatch"].sum()) == 0
+    full = Engine(hg, EngineConfig(refresh="full", **kw))
+    res_full = GraphSession.from_engine(full).run(query)
+    assert res.metrics == res_full.metrics
+    assert np.array_equal(res.result, res_full.result)

@@ -2,8 +2,10 @@
 """Fast perf-trajectory smoke point for tier-1 CI.
 
 Runs a tiny-graph subset of the benchmark suite (Fig. 10 read inflation
-+ the device sweep) and writes ``BENCH_smoke.json`` at the repo root, so
-every PR commits one perf trajectory point instead of an empty history.
++ the device sweep + the bucketed tick-cost sweep) and writes
+``BENCH_smoke.json`` at the repo root, so every PR commits one perf
+trajectory point instead of an empty history — with real measured
+``us_per_call`` wall clock (warm-compiled best-of-N) since PR 4.
 Wired into tier-1 as a non-slow test via ``tests/test_bench_smoke.py``.
 
 Usage: python tools/bench_smoke.py [OUT.json]
@@ -29,7 +31,7 @@ def main() -> None:
     from benchmarks.run import main as bench_main
     out = sys.argv[1] if len(sys.argv) > 1 \
         else str(ROOT / "BENCH_smoke.json")
-    sys.argv = ["bench_smoke", "--only", "fig10,device_sweep",
+    sys.argv = ["bench_smoke", "--only", "fig10,device_sweep,tick_cost",
                 "--json", out]
     bench_main()
 
