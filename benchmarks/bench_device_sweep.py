@@ -15,11 +15,12 @@ queues stretch the actual schedule. Reported per point:
     scheduler's relative advantage grows as the device slows (the
     I/O-bound regime rewards loading the right blocks first; on BFS the
     frontier is level-structured and fifo is already near-optimal).
-    The cost-aware ``hybrid`` policy — now fill-aware (priority ×
-    block fill, vertices+edges resident) so its cost signal survives
-    low-skew graphs where every span is 1 — is swept alongside
-    ``priority``, plus a dedicated low-skew (uniform) PPR point
-    demonstrating the fill signal.
+    The cost-aware ``hybrid`` policy — fill-aware (priority × block
+    fill, vertices+edges resident) so its cost signal survives low-skew
+    graphs where every span is 1 — is swept alongside ``priority`` and
+    the PR-5 ``hybrid_active`` variant (priority × live per-block
+    active count, the "useful work per pull" signal), plus a dedicated
+    low-skew (uniform) PPR point demonstrating the fill signal.
 
 ``us_per_call`` is real measured wall clock per point (warm engine,
 best-of-2). ``REPRO_BENCH_SMOKE=1`` shrinks the grid for the tier-1
@@ -39,7 +40,11 @@ from repro.storage.rmat import uniform_graph
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 TPS = (1, 8)                                  # ticks per 4 KB slot
 QDS = (1, 8) if SMOKE else (1, 4, 16)         # queue depths
-POLICIES = ("fifo",) if SMOKE else ("fifo", "priority", "hybrid")
+# hybrid = priority x static fill; hybrid_active = priority x LIVE
+# active count (PR-5 satellite) — swept side by side so the fill-vs-
+# span-vs-active comparison lands in one table
+POLICIES = ("fifo",) if SMOKE \
+    else ("fifo", "priority", "hybrid", "hybrid_active")
 
 
 def _timed_sweep(sess, query, configs):

@@ -1,0 +1,95 @@
+"""Concurrent query plane: queries/sec and I/O-per-query vs batch size.
+
+The PR-5 scale-and-scenario claim: N co-executing queries share every
+pulled block through the cross-query worklist, so physical I/O grows
+far sublinearly in Q versus the ``run_many`` back-to-back baseline
+(which re-fetches a block from scratch for query B even when query A
+just had it resident). Swept here for the paper's per-user workload —
+N-personalization PPR — over Q ∈ {1, 4, 16, 64}, plus a multi-source
+BFS point:
+
+  * ``io_per_query``  — batch physical ``io_blocks / Q``; the
+    acceptance asserts it decreases monotonically from Q=1 to Q=16,
+  * ``shared``        — submissions served from another query's
+    resident copy (``io_blocks_shared``); physical + shared equals the
+    solo sum exactly (conservation, checked per point),
+  * ``qps``           — measured queries/sec (warm-compiled best-of-2
+    wall clock over the whole batch),
+  * the ``run_many`` baseline at the same Q, for the amortization
+    ratio.
+
+``us_per_call`` is real measured wall clock per batch.
+``REPRO_BENCH_SMOKE=1`` runs a single Q=4 PPR point (plus its
+baseline) for the tier-1 smoke path.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import (bench_graph, emit, make_session,
+                               timeit_query)
+from repro.algorithms import PPR, bfs_batch, ppr_batch
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+QS = (4,) if SMOKE else (1, 4, 16, 64)
+MONO_QS = tuple(q for q in QS if q <= 16)      # acceptance window
+R_MAX = 1e-5
+
+
+def main() -> None:
+    g = bench_graph(scale=12)
+    sess = make_session(g, pool_slots=48)
+    io_pq: dict[int, float] = {}
+    for Q in QS:
+        batch = ppr_batch(range(Q), r_max=R_MAX)
+        res, secs = timeit_query(sess, batch, repeats=2)
+        m = res.metrics
+        io_pq[Q] = m.io_blocks / Q
+        emit(f"multiq_ppr_q{Q:02d}", secs,
+             f"io_per_query_{io_pq[Q]:.1f}_shared_{m.io_blocks_shared}"
+             f"_qps_{Q / max(secs, 1e-9):.1f}")
+
+    # run_many baseline: same queries back-to-back, no sharing — the
+    # amortization ratio is solo-sum / batch-physical. Measured at the
+    # largest monotonicity-window Q to keep the suite's runtime sane.
+    Qb = max(MONO_QS)
+    solos = sess.run_many([PPR(q, r_max=R_MAX) for q in range(Qb)])
+    solo_io = sum(r.metrics.io_blocks for r in solos)
+    batch_res = sess.run(ppr_batch(range(Qb), r_max=R_MAX))
+    ok = (batch_res.metrics.io_blocks
+          + batch_res.metrics.io_blocks_shared == solo_io)
+    ratio = solo_io / max(batch_res.metrics.io_blocks, 1)
+    emit(f"multiq_ppr_runmany_baseline_q{Qb:02d}", 0.0,
+         f"solo_io_{solo_io}_batch_io_{batch_res.metrics.io_blocks}"
+         f"_amortization_{ratio:.2f}x_conservation_"
+         f"{'ok' if ok else 'VIOLATION'}")
+    if not ok:
+        # raise so run.py counts a real failure — a derived string
+        # nothing greps is not a gate
+        raise AssertionError(
+            f"physical+shared != solo I/O at Q={Qb}: "
+            f"{batch_res.metrics.io_blocks}+"
+            f"{batch_res.metrics.io_blocks_shared} vs {solo_io}")
+
+    if len(MONO_QS) > 1:
+        seq = [round(io_pq[q], 6) for q in MONO_QS]
+        mono = all(a > b for a, b in zip(seq, seq[1:]))
+        emit("multiq_ppr_io_per_query_monotone", 0.0,
+             "ok" if mono else f"VIOLATION_{seq}")
+        if not mono:
+            raise AssertionError(
+                f"io-per-query not strictly decreasing over Q={MONO_QS}"
+                f": {seq}")
+
+    if not SMOKE:
+        # multi-source BFS point: the min-combiner workload
+        Q = 16
+        res, secs = timeit_query(sess, bfs_batch(range(Q)), repeats=2)
+        m = res.metrics
+        emit(f"multiq_bfs_q{Q:02d}", secs,
+             f"io_per_query_{m.io_blocks / Q:.1f}_shared_"
+             f"{m.io_blocks_shared}_qps_{Q / max(secs, 1e-9):.1f}")
+
+
+if __name__ == "__main__":
+    main()

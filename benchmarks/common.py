@@ -44,8 +44,15 @@ def bench_config(*, sync: bool = False, pool_slots: int = 64,
                  lanes: int = 4, trace: bool = False,
                  cached_policy: str = "fifo", executor: str = "gather",
                  chunk_size: int = 128, queue_depth: int = 16,
-                 device=None, bucketing: int = 0,
+                 device=None, bucketing: int = 6,
                  refresh: str = "incremental") -> EngineConfig:
+    # bucketing mirrors the EngineConfig default (capped size-class
+    # tiles since PR 5); bench_tick_cost sweeps 0 vs N explicitly.
+    # NOTE: at the tier-1 smoke cap (REPRO_BENCH_SCALE=8) this makes
+    # smoke rows SLOWER than the previous trajectory point — tiny
+    # graphs are dispatch-bound and pay the per-lane switch overhead
+    # with nothing to amortize; the win the default is sized for is
+    # the uncapped regime (see README "Performance", 1.2-3.5x/tick)
     return EngineConfig(lanes=lanes, prefetch=8, queue_depth=queue_depth,
                         pool_slots=pool_slots, chunk_size=chunk_size,
                         sync=sync, trace=trace, cached_policy=cached_policy,

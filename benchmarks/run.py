@@ -30,6 +30,7 @@ MODULES = [
     ("table2_partitioner", "benchmarks.bench_partitioner"),
     ("fig17_skew", "benchmarks.bench_skew"),
     ("tick_cost_bucketing", "benchmarks.bench_tick_cost"),
+    ("multi_query", "benchmarks.bench_multi_query"),
 ]
 
 

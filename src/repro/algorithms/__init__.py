@@ -1,14 +1,18 @@
-"""Algorithm package: query objects (the stable API) + bare engine-facing
-specs for executor-level tests and power users."""
-from repro.algorithms.bfs import BFS, bfs_algorithm
+"""Algorithm package: query objects (the stable API), batch builders
+for the concurrent plane, + bare engine-facing specs for executor-level
+tests and power users."""
+from repro.algorithms.bfs import BFS, bfs_algorithm, bfs_batch
 from repro.algorithms.wcc import WCC, wcc_algorithm
 from repro.algorithms.kcore import KCore, kcore_algorithm
-from repro.algorithms.ppr import PPR, PageRank, ppr_algorithm
+from repro.algorithms.ppr import (PPR, PageRank, PPRBatch, ppr_algorithm,
+                                  ppr_batch)
 from repro.algorithms.mis import MIS
 
 __all__ = [
     # query objects — the supported user API
     "BFS", "WCC", "KCore", "PPR", "PageRank", "MIS",
+    # concurrent-plane batch builders
+    "bfs_batch", "ppr_batch", "PPRBatch",
     # bare engine-facing specs
     "bfs_algorithm", "wcc_algorithm", "kcore_algorithm", "ppr_algorithm",
 ]

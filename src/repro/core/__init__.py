@@ -1,7 +1,8 @@
 from repro.core.block_state import (BlockState, Event, transition,
                                     TRANSITIONS)
 from repro.core.afs import AdaptiveFrontierSet
-from repro.core.api import AlgoContext, Algorithm, Query
+from repro.core.api import (AlgoContext, Algorithm, Query, QueryBatch,
+                            lift_extract, lift_init)
 from repro.core.engine import (Engine, EngineConfig, Metrics,
                                foreach_vertex_frontier)
 from repro.core.executor import (EXECUTORS, ExecResult, ExecTables,
@@ -9,20 +10,24 @@ from repro.core.executor import (EXECUTORS, ExecResult, ExecTables,
                                  PallasExecutor, Tile, make_executor)
 from repro.core.pool import BufferPool
 from repro.core.scheduler import (CACHED_POLICIES, FifoPolicy,
-                                  HybridPolicy, LruPolicy, PriorityPolicy,
-                                  PullPolicy, PullView, Scheduler,
-                                  make_pull_policy)
-from repro.core.session import GraphSession, RunResult
+                                  HybridActivePolicy, HybridPolicy,
+                                  LruPolicy, PriorityPolicy, PullPolicy,
+                                  PullView, Scheduler, make_pull_policy)
+from repro.core.service import GraphService, QueryHandle
+from repro.core.session import BatchResult, GraphSession, RunResult
 
 __all__ = [
     "BlockState", "Event", "transition", "TRANSITIONS",
     "AdaptiveFrontierSet", "Engine", "EngineConfig", "Metrics",
     "foreach_vertex_frontier",
-    "AlgoContext", "Algorithm", "Query", "GraphSession", "RunResult",
+    "AlgoContext", "Algorithm", "Query", "QueryBatch",
+    "lift_init", "lift_extract",
+    "GraphSession", "RunResult", "BatchResult",
+    "GraphService", "QueryHandle",
     "EXECUTORS", "ExecResult", "ExecTables", "ExecutorBackend",
     "GatherExecutor", "PallasExecutor", "Tile", "make_executor",
     "BufferPool",
-    "CACHED_POLICIES", "FifoPolicy", "HybridPolicy", "LruPolicy",
-    "PriorityPolicy", "PullPolicy", "PullView", "Scheduler",
+    "CACHED_POLICIES", "FifoPolicy", "HybridActivePolicy", "HybridPolicy",
+    "LruPolicy", "PriorityPolicy", "PullPolicy", "PullView", "Scheduler",
     "make_pull_policy",
 ]

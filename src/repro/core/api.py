@@ -33,6 +33,19 @@ A self-describing Algorithm (``init`` + ``extract`` present) can be run
 end-to-end by :class:`~repro.core.session.GraphSession`; user code
 constructs a :class:`Query` object (``BFS(source)``, ``WCC()``, ...)
 and never touches frontiers, reordered ids, or degree tables.
+
+**Concurrent queries (PR 5):** a :class:`QueryBatch` bundles N
+homogeneous queries — equal ``(name, params)``, e.g. multi-source BFS
+or N-personalization PPR — for co-execution on the engine's
+Q-stacked plane, where one block pull serves every query active in the
+block. The batched init/extract hooks (:meth:`QueryBatch.init_batch` /
+:meth:`QueryBatch.extract_batch`) default to *auto-lifting* the
+members' single-query hooks along a leading Q axis (:func:`lift_init` /
+:func:`lift_extract`); subclasses override them for vectorized setup
+(see ``repro.algorithms.ppr.PPRBatch``). The per-vertex ``priority``
+hook is auto-lifted inside the engine itself — it is applied to each
+query's state slice in the Q-scan, so algorithms need no batched
+variant.
 """
 from __future__ import annotations
 
@@ -127,3 +140,103 @@ class Algorithm:
         if self.combine == "add":
             return jnp.array(0, dtype=dtype)
         raise ValueError(f"unknown combiner {self.combine}")
+
+
+# ----------------------------------------------------------------------
+# concurrent query plane: QueryBatch + batched-hook auto-lifting
+# ----------------------------------------------------------------------
+
+def lift_init(algos: list[Algorithm],
+              ctx: AlgoContext) -> tuple[np.ndarray, StateT]:
+    """Auto-lift per-query ``init`` hooks into the batched init surface.
+
+    Runs every algorithm's own ``init(ctx)`` and stacks the results
+    along a leading Q axis: ``(frontier bool[Q, V], state {k: [Q, V]})``
+    — exactly the per-query arrays a solo run would start from, so the
+    batch plane's solo-equivalence contract starts from identical
+    inputs.
+    """
+    pairs = [a.init(ctx) for a in algos]
+    keys = set(pairs[0][1])
+    if any(set(s) != keys for _, s in pairs):
+        raise ValueError("batch members disagree on state keys")
+    front = np.stack([f for f, _ in pairs])
+    state = {k: np.stack([s[k] for _, s in pairs]) for k in pairs[0][1]}
+    return front, state
+
+
+def lift_extract(algos: list[Algorithm], states: StateT,
+                 ctx: AlgoContext) -> list:
+    """Auto-lift per-query ``extract`` hooks over [Q, V]-stacked state:
+    each algorithm reads its own row, returning per-query results in
+    ORIGINAL vertex ids (the solo extract applied to the solo-identical
+    state slice)."""
+    return [a.extract({k: v[i] for k, v in states.items()}, ctx)
+            for i, a in enumerate(algos)]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBatch(Query):
+    """N homogeneous queries co-executed on the engine's concurrent
+    plane (one compiled tick, one loop, cross-query shared I/O).
+
+    Homogeneous means equal ``(name, params)`` — multi-source BFS, or N
+    PPR personalizations sharing ``(alpha, r_max)`` (the paper's
+    per-user workload). Queries differing only in init data batch
+    together because ``init`` is outside the engine's compile key.
+    Heterogeneous submissions belong on
+    :class:`~repro.core.service.GraphService`, which groups by key and
+    drains one batch per group.
+
+    ``session.run(QueryBatch([...]))`` returns a
+    :class:`~repro.core.session.BatchResult`: per-query ``RunResult``s
+    (bit-identical to solo runs) plus aggregate metrics whose
+    ``io_blocks`` counts each physically-read block once.
+    """
+
+    queries: tuple[Query, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "queries", tuple(self.queries))
+        if not self.queries:
+            raise ValueError("QueryBatch needs at least one query")
+
+    def build_batch(self) -> list[Algorithm]:
+        """Build every member's Algorithm and enforce homogeneity."""
+        algos = []
+        for q in self.queries:
+            if type(q).execute is not Query.execute:
+                raise ValueError(
+                    f"{type(q).__name__} overrides Query.execute "
+                    "(multi-pass / host barriers) and cannot join a "
+                    "QueryBatch; run it solo or submit it to a "
+                    "GraphService, which drains it outside the batch")
+            algos.append(q.build())
+        a0 = algos[0]
+        for q, a in zip(self.queries, algos):
+            if (a.name, a.params) != (a0.name, a0.params):
+                raise ValueError(
+                    "QueryBatch members must share one compiled tick "
+                    f"(equal (name, params)); got {(a0.name, a0.params)}"
+                    f" vs {(a.name, a.params)} from {q!r}. Batch "
+                    "per-parameter groups separately (GraphService "
+                    "does this automatically)")
+            if a.init is None or a.extract is None:
+                raise ValueError(
+                    f"algorithm {a.name!r} is not self-describing "
+                    "(init/extract hooks required for batching)")
+        return algos
+
+    # ---- batched hooks (override for vectorized setup/readout) -------
+    def init_batch(self, algos: list[Algorithm],
+                   ctx: AlgoContext) -> tuple[np.ndarray, StateT]:
+        """Batched init: default auto-lifts the single-query hooks."""
+        return lift_init(algos, ctx)
+
+    def extract_batch(self, algos: list[Algorithm], states: StateT,
+                      ctx: AlgoContext) -> list:
+        """Batched extract: default auto-lifts the single-query hooks."""
+        return lift_extract(algos, states, ctx)
+
+    def execute(self, session):  # -> repro.core.session.BatchResult
+        return session._run_batch(self)

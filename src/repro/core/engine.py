@@ -56,6 +56,16 @@ tick schedule is a valid sequential order. ``sync=True`` gives the
 special-case synchronous mode of Sec. 4.3 (fresh worklist per
 iteration).
 
+The **concurrent query plane** (:meth:`Engine.run_batch`, PR 5) executes
+Q independent queries of one algorithm inside a single loop: every
+per-query carry gains a leading Q axis and the solo tick is mapped over
+it, while the scheduler's cross-query worklist deduplicates the
+queries' preload submissions — one physical read serves every query
+with active vertices in the block (``Metrics.io_blocks_shared``), which
+is the paper's "reuse active blocks in memory" claim lifted across
+queries. Per-query results and counters stay bit-identical to solo runs
+by construction.
+
 Mini vertices (deg <= delta_deg, Sec. 5.2) are grouped into pseudo-blocks
 with zero I/O cost — they are always memory-resident, which is exactly the
 hybrid storage architecture's point.
@@ -87,6 +97,10 @@ TRACE_LEN = 16384
 _COUNTERS = ("io_ops", "io_blocks", "edges_scanned", "vertices_processed",
              "reuse_activations", "blocks_reused", "exec_idle_ticks",
              "io_active_ticks", "inflight_ticks", "barriers", "ticks")
+
+#: batch-only counters: preload submissions served by another query's
+#: resident / in-flight copy instead of new device traffic
+_SHARED_COUNTERS = ("io_ops_shared", "io_blocks_shared")
 
 
 # ---- 64-bit counters as uint32 limb pairs ----------------------------
@@ -123,11 +137,15 @@ class EngineConfig:
     device: DeviceModel | None = None  # span-proportional device time;
     #                             None = UniformDevice(io_latency), which
     #                             reproduces the pre-device schedule
-    bucketing: int = 0          # executor tile buckets: 0 = one global
-    #                             (Vm, We, EK) tile (compat default);
-    #                             N > 0 = at most N power-of-two block
-    #                             size classes with bucket-local tiles,
-    #                             bit-identical results
+    bucketing: int = 6          # executor tile buckets: N > 0 = at most
+    #                             N power-of-two block size classes with
+    #                             bucket-local tiles — bit-identical
+    #                             results, per-tick cost proportional to
+    #                             the blocks pulled (default since PR 5,
+    #                             after a bench cycle confirmed the
+    #                             tick-cost win); 0 = one global
+    #                             (Vm, We, EK) tile, the escape hatch
+    #                             reproducing the pre-bucketing lowering
     refresh: str = "incremental"  # worklist metadata maintenance:
     #                             'incremental' (delta reductions +
     #                             pulled-block rebuild, exact) | 'full'
@@ -155,6 +173,16 @@ class Metrics:
     #                             mean queue depth while I/O is active)
     barriers: int               # sync-mode iterations
     ticks: int
+    # ---- concurrent-query (batch) accounting -------------------------
+    # In a QueryBatch, each query's preload submissions are split:
+    # io_ops/io_blocks count only PHYSICAL reads credited to this query
+    # (first requester of a block nobody holds), while *_shared count
+    # submissions served by another query's resident or in-flight copy.
+    # Per query, physical + shared == the solo run's logical I/O; solo
+    # runs (and Q=1 batches) have shared == 0 and are bit-identical to
+    # the pre-batch counters.
+    io_ops_shared: int = 0
+    io_blocks_shared: int = 0
 
     @property
     def io_bytes(self) -> int:
@@ -344,16 +372,14 @@ class Engine:
         return out_state, metrics, None
 
     # ------------------------------------------------------------------
-    def _run_impl(self, algo: Algorithm, front0, state0):
+    def _initial_carry(self, algo: Algorithm, front0, state0):
+        """Per-query loop carry at tick 0 (shared by solo and batch)."""
         cfg = self.cfg
         B = self.B
-        sched, pool, executor = self.scheduler, self.pool, self.executor
         i32 = jnp.int32
-
-        incremental = cfg.refresh == "incremental"
-        check = cfg.check_refresh and incremental
-        nact0, prio0 = sched.refresh(algo, state0, front0)
-        b_state0 = sched.initial_block_state(nact0)
+        check = cfg.check_refresh and cfg.refresh == "incremental"
+        nact0, prio0 = self.scheduler.refresh(algo, state0, front0)
+        b_state0 = self.scheduler.initial_block_state(nact0)
         counters0 = {k: _c64_zero() for k in _COUNTERS}
         trace_keys = ("io_blocks", "lanes", "edges", "frontier",
                       "inflight", "io_active", "used_slots") \
@@ -370,16 +396,58 @@ class Engine:
             b_nactive=nact0, b_prio=prio0,
             used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
             counters=counters0, trace=trace0)
-        if incremental:
+        if cfg.refresh == "incremental":
             carry0["v_prio"] = algo.priority(
                 state0, self.t_v_deg).astype(i32)
+        return carry0
 
-        def work_pending(c):
-            return (jnp.any(c["front"]) | jnp.any(c["front_next"])
-                    | jnp.any(c["b_state"] == S_LOADING))
+    @staticmethod
+    def _work_pending(c):
+        """Per-query liveness; reduces the trailing axis, so it applies
+        unchanged to a solo carry and to each row of a Q-stacked one."""
+        return (jnp.any(c["front"], axis=-1)
+                | jnp.any(c["front_next"], axis=-1)
+                | jnp.any(c["b_state"] == S_LOADING, axis=-1))
+
+    def _run_impl(self, algo: Algorithm, front0, state0):
+        cfg = self.cfg
+        tick = self._tick_fn(algo)
+        carry0 = self._initial_carry(algo, front0, state0)
 
         def cond(c):
-            return (c["t"] < cfg.max_ticks) & work_pending(c)
+            return (c["t"] < cfg.max_ticks) & self._work_pending(c)
+
+        def step(c):
+            # solo: every submission is physical I/O — credit it as-is
+            c2, aux = tick(c)
+            cnt = dict(c2["counters"])
+            cnt["io_ops"] = _c64_add(cnt["io_ops"], aux["io_ops"])
+            cnt["io_blocks"] = _c64_add(cnt["io_blocks"],
+                                        aux["io_blocks"])
+            return dict(c2, counters=cnt)
+
+        out = jax.lax.while_loop(cond, step, carry0)
+        return out["state"], out["counters"], out["trace"]
+
+    # ------------------------------------------------------------------
+    def _tick_fn(self, algo: Algorithm):
+        """Build the engine tick: ``carry -> (carry', io_aux)``.
+
+        One body shared verbatim between the solo loop and the
+        concurrent batch plane (which maps it over the Q axis). The
+        preload's I/O crediting is *returned* (``io_aux``: this tick's
+        submission counts plus the per-block submitted spans) instead
+        of added to the counters in place, so the batch step can first
+        split each tick's submissions into physical vs shared reads
+        across queries; the solo step credits them unchanged — same
+        additions, same totals.
+        """
+        cfg = self.cfg
+        sched, pool, executor = self.scheduler, self.pool, self.executor
+        i32 = jnp.int32
+
+        incremental = cfg.refresh == "incremental"
+        check = cfg.check_refresh and incremental
 
         def tick(c):
             state, front = c["state"], c["front"]
@@ -397,8 +465,8 @@ class Engine:
                                 c["used_slots"], pool, t)
             b_state, b_deadline = pre.b_state, pre.b_deadline
             used_slots = pre.used_slots
-            cnt["io_ops"] = _c64_add(cnt["io_ops"], pre.io_ops)
-            cnt["io_blocks"] = _c64_add(cnt["io_blocks"], pre.io_blocks)
+            # io_ops/io_blocks are credited by the caller from io_aux
+            # (the batch plane first dedups them across queries)
 
             # ---- 3. pull: cached-queue policy --------------------------
             eidx, lane_valid, b_used = sched.pull(
@@ -510,9 +578,139 @@ class Engine:
                          counters=cnt, trace=trace)
             if incremental:
                 out_c["v_prio"] = v_prio2
-            return out_c
+            io_aux = dict(io_ops=pre.io_ops, io_blocks=pre.io_blocks,
+                          sub_mask=pre.sub_mask, sub_spans=pre.sub_spans)
+            return out_c, io_aux
 
-        out = jax.lax.while_loop(cond, tick, carry0)
+        return tick
+
+    # ------------------------------------------------------------------
+    # concurrent query plane (PR 5): Q-stacked execution, shared I/O
+    # ------------------------------------------------------------------
+    def run_batch(self, algo: Algorithm, init_fronts: np.ndarray,
+                  init_states: dict
+                  ) -> tuple[dict, list[Metrics], list[dict] | None]:
+        """Execute Q stacked instances of ``algo`` in ONE engine loop.
+
+        ``init_fronts`` is bool[Q, V]; every array in ``init_states`` is
+        [Q, V]-stacked. Each query carries its OWN control plane (block
+        states, worklist metadata, pool accounting), advanced in
+        lockstep by mapping the solo tick over the Q axis — so every
+        query's schedule, state trajectory, and non-I/O counters are
+        bit-identical to a solo :meth:`run` of the same query. The
+        cross-query worklist lives at the I/O layer: each tick, all
+        queries' preload submissions are deduplicated
+        (:meth:`~repro.core.scheduler.Scheduler.split_shared_io`)
+        so one physical read serves every query that wants the block
+        while it is resident; per-query ``Metrics.io_blocks`` counts
+        only the physical reads credited to that query and
+        ``io_blocks_shared`` the rest (physical + shared == the solo
+        run's logical I/O, exactly).
+
+        Why per-query schedules instead of one aggregated pull order:
+        add-combiner algorithms (PPR's forward push) have
+        schedule-dependent results — even in exact arithmetic the final
+        (p, r) split depends on how residuals interleave — so any
+        shared pull order would break the solo-equivalence contract
+        the query API promises. Min-combiner algorithms would tolerate
+        it; an opt-in aggregated mode for those is a recorded
+        follow-on. The Q axis is mapped (``lax.map``/scan), not
+        vmapped: the scanned body is the solo tick's exact computation
+        (bit-parity by construction) and needs no batching rules for
+        the per-lane ``lax.switch`` routing or the pallas kernel.
+
+        A converged query's rows pass through untouched (``lax.cond``)
+        while the loop drains the others, so its counters freeze at the
+        solo run's final values; its resident blocks stay in its pool
+        partition (each query budgets ``pool_slots`` of its own) and
+        keep serving other queries' requests as shared hits.
+
+        Returns ``(state, metrics, traces)``: ``state`` dict of [Q, V]
+        arrays, per-query ``Metrics`` list, and per-query trace dicts
+        iff ``cfg.trace``. Compiled once per ``(Q, name, params, cfg)``
+        — batches differing only in init data share the compilation.
+        """
+        cfg = self.cfg
+        fronts = np.asarray(init_fronts, dtype=bool)
+        if fronts.ndim != 2:
+            raise ValueError(
+                f"init_fronts must be [Q, V], got shape {fronts.shape}")
+        Q = int(fronts.shape[0])
+        front0 = jnp.asarray(fronts & np.asarray(self.t_is_real)[None, :])
+        state0 = {k: jnp.asarray(v) for k, v in init_states.items()}
+        key = ("batch", Q, algo.name, algo.params, cfg)
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(
+                functools.partial(self._run_batch_impl, algo))
+        out_state, counters, trace = self._compiled[key](front0, state0)
+        counters = {k: (np.asarray(hi), np.asarray(lo))
+                    for k, (hi, lo) in counters.items()}
+        metrics = [Metrics(**{k: (int(hi[q]) << 32) | int(lo[q])
+                              for k, (hi, lo) in counters.items()})
+                   for q in range(Q)]
+        out_state = {k: np.asarray(v) for k, v in out_state.items()}
+        if cfg.trace:
+            trace = {k: np.asarray(v) for k, v in trace.items()}
+            traces = [{k: v[q][:min(metrics[q].ticks, TRACE_LEN)]
+                       for k, v in trace.items()} for q in range(Q)]
+            return out_state, metrics, traces
+        return out_state, metrics, None
+
+    def _run_batch_impl(self, algo: Algorithm, fronts0, states0):
+        cfg = self.cfg
+        B = self.B
+        i32 = jnp.int32
+        Q = fronts0.shape[0]
+        tick = self._tick_fn(algo)
+
+        # per-query carries, stacked on a leading Q axis; the map body
+        # is the solo _initial_carry verbatim
+        carry0 = jax.lax.map(
+            lambda fs: self._initial_carry(algo, fs[0], fs[1]),
+            (fronts0, states0))
+        zq = jnp.zeros(Q, jnp.uint32)
+        cnt0 = dict(carry0["counters"])
+        for k in _SHARED_COUNTERS:
+            cnt0[k] = (zq, zq)
+        carry0 = dict(carry0, counters=cnt0)
+
+        def alive_mask(c):
+            return (c["t"] < cfg.max_ticks) & self._work_pending(c)
+
+        def cond(c):
+            return jnp.any(alive_mask(c))
+
+        def step(c):
+            alive = alive_mask(c)
+            # residency at the START of the tick (post-finish of the
+            # previous tick): LOADING and CACHED copies can both serve
+            # another query's request without new device traffic
+            resident = (c["b_state"] == S_LOADING) | \
+                       (c["b_state"] == S_CACHED)
+
+            def qstep(args):
+                av, cq = args
+
+                def dead(cq):
+                    zero = jnp.zeros((), i32)
+                    return cq, dict(io_ops=zero, io_blocks=zero,
+                                    sub_mask=jnp.zeros(B, bool),
+                                    sub_spans=jnp.zeros(B, i32))
+
+                return jax.lax.cond(av, tick, dead, cq)
+
+            c2, aux = jax.lax.map(qstep, (alive, c))
+            ops_p, blk_p, ops_s, blk_s = Scheduler.split_shared_io(
+                resident, aux["sub_mask"], aux["sub_spans"])
+            cnt = dict(c2["counters"])
+            cnt["io_ops"] = _c64_add(cnt["io_ops"], ops_p)
+            cnt["io_blocks"] = _c64_add(cnt["io_blocks"], blk_p)
+            cnt["io_ops_shared"] = _c64_add(cnt["io_ops_shared"], ops_s)
+            cnt["io_blocks_shared"] = _c64_add(cnt["io_blocks_shared"],
+                                               blk_s)
+            return dict(c2, counters=cnt)
+
+        out = jax.lax.while_loop(cond, step, carry0)
         return out["state"], out["counters"], out["trace"]
 
 

@@ -37,6 +37,17 @@ single global tile's flat scatter order, so results (including
 floating-point ``add`` state) are bit-identical to the ``bucketing=0``
 compat default.
 
+**The Q axis** (concurrent query plane, PR 5): executors are written
+against ONE query's `[V]` state and the engine maps the whole tick —
+executor included — over the batch's leading Q axis (`lax.map`, i.e.
+scan). Each query's pass is therefore the solo computation verbatim:
+per-lane bucket routing and tile sizes are unchanged, the scatter order
+per query is the solo order (bit-parity by construction), and the
+pallas kernel needs no vmap batching rule. Both backends carry the Q
+axis this way with zero executor-code changes; a Q-vmapped fast path
+(batched expansion, one scatter over `[Q, V]`) is a possible follow-on
+for min-combiner algorithms whose results are schedule-independent.
+
 New backends register via :data:`EXECUTORS`.
 """
 from __future__ import annotations

@@ -13,8 +13,15 @@ This module owns the per-block control plane of the engine tick:
     admission is delegated to the :class:`~repro.core.pool.BufferPool`),
   * the cached-queue *pull* step behind a small policy protocol
     (:class:`PullPolicy`) — ``fifo`` (paper default), ``priority``,
-    ``lru``, and the cost-aware ``hybrid`` (priority × block fill) are
+    ``lru``, and the cost-aware ``hybrid`` (priority × static block
+    fill) / ``hybrid_active`` (priority × live active count) are
     provided and new policies register via :data:`CACHED_POLICIES`,
+  * the **cross-query worklist** aggregation for the concurrent query
+    plane (:meth:`Scheduler.split_shared_io`): per-query preload
+    submissions are deduplicated across the batch's Q-stacked block
+    states, so one physical read serves every query that wants the
+    block while it is resident — the other queries' submissions are
+    accounted as *shared* I/O instead of new device traffic,
   * worklist metadata (per-block active counts and priorities), either
     rebuilt from scratch every tick (:meth:`Scheduler.refresh`) or
     maintained *incrementally* from the executor's lane windows
@@ -64,6 +71,11 @@ class PullView:
     #: non-giant block), fill varies on low-skew graphs too, so
     #: fill-aware policies keep a signal there
     b_fill: jnp.ndarray | None = None
+    #: per-block ACTIVE vertex count this tick — the *dynamic* work a
+    #: pull retires right now, as opposed to the static ``b_fill``
+    #: capacity. Filled in by :meth:`Scheduler.pull` from the worklist
+    #: metadata it already receives
+    b_nactive: jnp.ndarray | None = None
 
 
 class PullPolicy:
@@ -137,17 +149,52 @@ class HybridPolicy(PullPolicy):
 
     def key(self, ready, view):
         fill = view.b_fill if view.b_fill is not None else view.b_span
-        fill = jnp.maximum(fill, 1).astype(jnp.float32)
-        prio = view.b_prio.astype(jnp.float32)
-        pmin = jnp.min(jnp.where(ready, prio, jnp.inf))
-        pmin = jnp.where(jnp.isfinite(pmin), pmin, 0.0)
-        score = (prio - pmin + 1.0) * fill
-        return jnp.where(ready, score, jnp.float32(NEG_INF))
+        return _rebased_score(ready, view.b_prio, fill)
+
+
+class HybridActivePolicy(PullPolicy):
+    """Cost-aware like ``hybrid``, weighted by the *active* fill.
+
+    ``hybrid`` weighs priority by the block's static size (everything
+    resident), which overstates a pull's value once most of the block
+    has gone quiet: a hub block with 2 active vertices left still
+    outranks a small block that is fully active. Weighting by
+    ``b_nactive`` — the live per-block active count the worklist
+    already maintains — tracks the useful work *this* pull retires
+    (ROADMAP follow-on to the fill-aware policy). Falls back to fill /
+    span when the caller supplies no active counts.
+    """
+
+    name = "hybrid_active"
+
+    def key(self, ready, view):
+        w = view.b_nactive
+        if w is None:
+            w = view.b_fill if view.b_fill is not None else view.b_span
+        return _rebased_score(ready, view.b_prio, w)
+
+
+def _rebased_score(ready, prio, weight):
+    """priority × weight with priority rebased >= 1 over ready blocks.
+
+    Shared by the ``hybrid*`` policies: algorithm priorities may be
+    negative (BFS ``-dis``, WCC ``-label``), where a raw product would
+    invert the weight preference; rebasing against the ready-minimum
+    keeps the key monotone in both factors. float32 (int32 products
+    overflow), always >= 1 for ready blocks so the engine's
+    ``key > NEG_INF`` validity test is safe by construction.
+    """
+    weight = jnp.maximum(weight, 1).astype(jnp.float32)
+    prio = prio.astype(jnp.float32)
+    pmin = jnp.min(jnp.where(ready, prio, jnp.inf))
+    pmin = jnp.where(jnp.isfinite(pmin), pmin, 0.0)
+    score = (prio - pmin + 1.0) * weight
+    return jnp.where(ready, score, jnp.float32(NEG_INF))
 
 
 CACHED_POLICIES: dict[str, type[PullPolicy]] = {
     p.name: p for p in (FifoPolicy, PriorityPolicy, LruPolicy,
-                        HybridPolicy)
+                        HybridPolicy, HybridActivePolicy)
 }
 
 
@@ -184,6 +231,16 @@ class PreloadResult:
     io_blocks: jnp.ndarray   # 4 KB blocks submitted this tick (i32)
     inflight: jnp.ndarray    # reads in flight before this tick's submits
     #                          (post-completion: the queue-depth budget)
+    sub_mask: jnp.ndarray    # bool[B]: block submitted this tick — the
+    #                          per-block view of io_ops. An explicit mask,
+    #                          NOT sub_spans > 0: zero-span submissions
+    #                          exist (early-stop can evict a block_io==0
+    #                          pseudo-block to UNCACHED) and still count
+    #                          as ops in the solo accounting
+    sub_spans: jnp.ndarray   # i32[B]: span submitted per block this tick
+    #                          (0 elsewhere) — the per-block view of
+    #                          io_blocks; the cross-query plane dedups
+    #                          both with :meth:`Scheduler.split_shared_io`
 
 
 @dataclasses.dataclass
@@ -420,11 +477,14 @@ class Scheduler:
         lat = self.device.latency_ticks(spans, self.queue_depth)
         b_deadline = b_deadline.at[pidx].set(
             jnp.where(take, t + lat, b_deadline[pidx]))
+        sub_mask = jnp.zeros(self.B, bool).at[pidx].max(take)
+        sub_spans = jnp.zeros(self.B, i32).at[pidx].add(
+            jnp.where(take, spans, 0))
         return PreloadResult(
             b_state=b_state, b_deadline=b_deadline, used_slots=used_slots,
             io_ops=jnp.sum(take).astype(i32),
             io_blocks=jnp.sum(spans * take).astype(i32),
-            inflight=inflight)
+            inflight=inflight, sub_mask=sub_mask, sub_spans=sub_spans)
 
     # ---- stage 3: pull from the cached queue -------------------------
     def pull(self, b_state, b_nactive, view: PullView):
@@ -437,6 +497,8 @@ class Scheduler:
             view = dataclasses.replace(view, b_span=self.block_io)
         if view.b_fill is None and self.block_fill is not None:
             view = dataclasses.replace(view, b_fill=self.block_fill)
+        if view.b_nactive is None:
+            view = dataclasses.replace(view, b_nactive=b_nactive)
         ready = (b_state == S_CACHED) & (b_nactive > 0)
         ekey = self.policy.key(ready, view)
         _, eidx = jax.lax.top_k(ekey, self.E)
@@ -444,6 +506,42 @@ class Scheduler:
         b_used = view.b_used.at[eidx].set(
             jnp.where(lane_valid, view.t + 1, view.b_used[eidx]))
         return eidx, lane_valid, b_used
+
+    # ---- cross-query worklist: physical/shared I/O split -------------
+    @staticmethod
+    def split_shared_io(resident, sub_mask, sub_spans):
+        """Aggregate per-query preload submissions across a query batch.
+
+        ``resident[q, b]`` — block ``b`` held resident (LOADING or
+        CACHED) by query ``q`` at the START of this tick; ``sub_mask[q,
+        b]`` / ``sub_spans[q, b]`` — whether / how many 4 KB slots
+        query ``q`` submitted for ``b`` THIS tick (the mask is
+        explicit because zero-span submissions exist and count as
+        ops). A submission is *physical* (it actually touches the
+        device) only if no query already holds the block and no
+        earlier-indexed query submitted it this same tick; every other
+        submission is *shared* — served by the in-flight read or the
+        resident copy another query's worklist already paid for. This
+        is the cross-query worklist's I/O dedup: per-query counts split
+        exactly, ``physical + shared == solo logical I/O``.
+
+        Queries only ever submit blocks they do not hold (preload takes
+        UNCACHED blocks), so ``resident`` rows never mask a query's own
+        submissions. Returns per-query i32 vectors
+        ``(io_ops_phys, io_blocks_phys, io_ops_shared,
+        io_blocks_shared)``.
+        """
+        i32 = jnp.int32
+        subm = sub_mask
+        resident_any = jnp.any(resident, axis=0)
+        qidx = jnp.arange(subm.shape[0])[:, None]
+        first = jnp.argmax(subm, axis=0)        # first submitter per block
+        phys = subm & ~resident_any[None, :] & (qidx == first[None, :])
+        shared = subm & ~phys
+        spans = lambda m: jnp.sum(jnp.where(m, sub_spans, 0),
+                                  axis=1).astype(i32)
+        count = lambda m: jnp.sum(m, axis=1).astype(i32)
+        return count(phys), spans(phys), count(shared), spans(shared)
 
     # ---- stage 7: finish / reactivation / eviction -------------------
     def finish(self, b_state, b_stamp, b_reuse, b_nactive2, eidx,

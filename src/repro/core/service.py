@@ -1,0 +1,143 @@
+"""GraphService: a submit/drain query runner over the concurrent plane.
+
+The ROADMAP north star is serving heavy multi-user traffic; the unit of
+that workload is "many independent queries against one graph", not one
+query at a time. ``GraphService`` is the runner shaped for it:
+
+    svc = GraphService(graph, EngineConfig(pool_slots=64))
+    h0 = svc.submit(PPR(source=u0, r_max=1e-6))   # one handle per user
+    h1 = svc.submit(PPR(source=u1, r_max=1e-6))
+    h2 = svc.submit(BFS(source=v))
+    results = svc.drain()                          # submission order
+    h0.result().result                             # or via the handle
+
+``submit`` only enqueues (cheap, no compile, no run). ``drain`` groups
+the pending queries by their compiled-tick key ``(name, params)`` and
+runs each group of 2+ batchable queries as ONE
+:class:`~repro.core.api.QueryBatch` on the engine's Q-stacked plane —
+so the PPR personalizations above share every pulled block (one
+physical read serves both, the rest is ``Metrics.io_blocks_shared``)
+while the BFS runs after them. Results are bit-identical to solo
+``session.run`` calls, per the batch plane's contract.
+
+Multi-pass queries that override ``Query.execute`` (``MIS``) cannot
+join a batch — they need host barriers between engine passes — and are
+drained as solo runs, in submission order with everything else.
+
+The per-drain :class:`~repro.core.session.BatchResult` aggregates land
+in :attr:`GraphService.last_batches` so callers can read the shared-I/O
+totals of the drain they just paid for.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.api import Query, QueryBatch
+from repro.core.session import BatchResult, GraphSession, RunResult
+
+
+class QueryHandle:
+    """Ticket for one submitted query; resolved by the next ``drain``."""
+
+    __slots__ = ("query", "_result")
+
+    def __init__(self, query: Query):
+        self.query = query
+        self._result: RunResult | None = None
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> RunResult:
+        if self._result is None:
+            raise RuntimeError(
+                "query not drained yet — call GraphService.drain() first")
+        return self._result
+
+
+class GraphService:
+    """Concurrent query runner on top of :class:`GraphSession`.
+
+    Accepts either an existing session or the same construction
+    arguments as :class:`GraphSession` (a graph plus engine config /
+    build keywords).
+    """
+
+    def __init__(self, graph_or_session: Any = None, cfg=None, **kw):
+        if isinstance(graph_or_session, GraphSession):
+            if cfg is not None or kw:
+                raise ValueError(
+                    "pass either a ready GraphSession or graph+config "
+                    "arguments, not both")
+            self.session = graph_or_session
+        else:
+            self.session = GraphSession(graph_or_session, cfg, **kw)
+        self._pending: list[QueryHandle] = []
+        #: BatchResult per 2+-sized group of the most recent drain
+        #: (shared-I/O introspection: ``sum(b.metrics.io_blocks_shared
+        #: for b in svc.last_batches)``)
+        self.last_batches: list[BatchResult] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Queries submitted but not yet drained."""
+        return len(self._pending)
+
+    def submit(self, query: Query) -> QueryHandle:
+        """Enqueue one query; returns a handle resolved by ``drain``."""
+        if isinstance(query, QueryBatch):
+            raise ValueError(
+                "submit the member queries individually; GraphService "
+                "forms batches itself at drain time")
+        handle = QueryHandle(query)
+        self._pending.append(handle)
+        return handle
+
+    def drain(self) -> list[RunResult]:
+        """Run every pending query; returns results in submission order.
+
+        Batchable queries (self-describing, no custom ``execute``)
+        group by compiled-tick key ``(name, params)``; each group of 2+
+        co-executes as one :class:`QueryBatch` with cross-query shared
+        I/O, singletons and multi-pass queries run solo. Handles are
+        resolved in place.
+        """
+        pending = list(self._pending)
+        self.last_batches = []
+        # each group keeps (handle, built algo) so the batch run reuses
+        # the algorithms the grouping already built
+        groups: dict[tuple, list[tuple]] = {}
+        solo: list[QueryHandle] = []
+        try:
+            for h in pending:
+                q = h.query
+                if type(q).execute is not Query.execute:
+                    solo.append(h)
+                    continue
+                algo = q.build()
+                if algo.init is None or algo.extract is None:
+                    solo.append(h)
+                    continue
+                groups.setdefault((algo.name, algo.params),
+                                  []).append((h, algo))
+            for pairs in groups.values():
+                if len(pairs) == 1:
+                    solo.append(pairs[0][0])
+                    continue
+                handles = [h for h, _ in pairs]
+                batch = QueryBatch(tuple(h.query for h in handles))
+                bres = self.session._run_batch(
+                    batch, algos=[a for _, a in pairs])
+                self.last_batches.append(bres)
+                for h, r in zip(handles, bres.results):
+                    h._result = r
+            for h in solo:
+                h._result = self.session.run(h.query)
+        finally:
+            # a failing query must not take the rest of the queue with
+            # it: only resolved handles leave the pending list, so a
+            # retry drain() still runs everything the exception skipped
+            self._pending = [h for h in self._pending if not h.done]
+        return [h.result() for h in pending]

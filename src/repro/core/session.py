@@ -23,6 +23,15 @@ Every run returns a :class:`RunResult` with a fixed shape — callers
 never branch on ``cfg.trace`` to learn a tuple arity, and never index
 ``state`` by reordered ids: ``result`` is already in original vertex
 ids via the algorithm's ``extract`` hook.
+
+**Concurrent queries (PR 5):** ``session.run(QueryBatch([...]))``
+co-executes N homogeneous queries in one engine loop and returns a
+:class:`BatchResult` — per-query ``RunResult``s bit-identical to solo
+runs, with physical I/O deduplicated across the batch
+(``metrics.io_blocks_shared``). ``run_many`` remains the sequential
+baseline (back-to-back runs, no cross-query sharing). For mixed
+workloads use :class:`~repro.core.service.GraphService`, which groups
+submissions into batches by compiled-tick key and drains them.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ from typing import Any, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.api import AlgoContext, Algorithm, Query
+from repro.core.api import AlgoContext, Algorithm, Query, QueryBatch
 from repro.core.engine import Engine, EngineConfig, Metrics
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import CSRGraph
@@ -52,7 +61,40 @@ class RunResult:
     metrics: Metrics              # exact engine counters
     trace: dict | None            # per-tick pipeline trace iff cfg.trace
     modeled_runtime: float | None  # SSDModel wall-clock; None if no model
-    config: EngineConfig          # config this ran under (sweep provenance)
+    config: EngineConfig          # SNAPSHOT of the config this ran under
+    #                               (sweep/fork provenance; never aliases
+    #                               the engine's live cfg attribute)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Result of one :class:`~repro.core.api.QueryBatch` co-execution.
+
+    ``results[i]`` is the i-th member query's :class:`RunResult`,
+    bit-identical (result, state, non-I/O counters) to a solo
+    ``session.run`` of that query. ``metrics`` is the batch aggregate
+    (per-query Metrics summed): its ``io_blocks`` counts every
+    physically-read block ONCE across the batch, and
+    ``io_blocks_shared`` the submissions served from another query's
+    resident copy — ``io_blocks + io_blocks_shared`` equals the sum of
+    the members' solo I/O, so the gap IS the cross-query worklist's
+    saving. (Aggregate ``ticks`` sums per-query tick counts; the
+    batch's wall-clock critical path is ``max`` over members.)
+    """
+
+    query: Query                  # the QueryBatch
+    results: list[RunResult]
+    metrics: Metrics
+    config: EngineConfig          # snapshot, as in RunResult
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i) -> RunResult:
+        return self.results[i]
 
 
 class GraphSession:
@@ -159,6 +201,38 @@ class GraphSession:
         """Assemble a RunResult (multi-pass queries call this directly)."""
         modeled = self.ssd.modeled_runtime(metrics) \
             if self.ssd is not None else None
+        # snapshot, not the live self.engine.cfg reference. EngineConfig
+        # is frozen today, so the direct reference was safe in practice;
+        # the copy pins sweep/fork provenance against cfg ever growing
+        # mutable or cached state (cheap: one frozen-dataclass copy)
         return RunResult(query=query, result=result, state=state,
                          metrics=metrics, trace=trace,
-                         modeled_runtime=modeled, config=self.engine.cfg)
+                         modeled_runtime=modeled,
+                         config=dataclasses.replace(self.engine.cfg))
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, batch: QueryBatch,
+                   algos: list[Algorithm] | None = None) -> BatchResult:
+        """Co-execute a homogeneous QueryBatch on the engine's
+        Q-stacked plane (one compiled tick, shared physical I/O).
+        ``algos`` lets a caller that already built and validated the
+        members' algorithms (``GraphService`` grouping) skip the
+        rebuild; user-formed batches go through ``build_batch`` and
+        its homogeneity checks."""
+        if algos is None:
+            algos = batch.build_batch()
+        fronts, states = batch.init_batch(algos, self.ctx)
+        out_states, metrics, traces = self.engine.run_batch(
+            algos[0], fronts, states)
+        extracted = batch.extract_batch(algos, out_states, self.ctx)
+        results = [
+            self._wrap(q, extracted[i],
+                       {k: v[i] for k, v in out_states.items()},
+                       metrics[i],
+                       traces[i] if traces is not None else None)
+            for i, q in enumerate(batch.queries)]
+        total = metrics[0]
+        for m in metrics[1:]:
+            total = total + m
+        return BatchResult(query=batch, results=results, metrics=total,
+                           config=dataclasses.replace(self.engine.cfg))

@@ -16,8 +16,10 @@ from conftest import (check_is_mis, oracle_bfs, oracle_kcore, oracle_ppr,
 
 
 def make_session(g, sync=False, **kw):
+    # bucketing=0: results are bit-identical either way (enforced by
+    # test_bucketing); the global tile keeps per-test compile times down
     cfg = EngineConfig(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
-                       chunk_size=64, sync=sync, **kw)
+                       chunk_size=64, sync=sync, bucketing=0, **kw)
     return GraphSession(g, cfg, block_edges=64)
 
 
@@ -143,7 +145,7 @@ def test_early_stop_engine_runs():
     g = small_graph(n=200, m=1000, seed=9)
     hg = build_hybrid(g, block_edges=64)
     eng = Engine(hg, EngineConfig(early_stop=2, pool_slots=16,
-                                  chunk_size=64))
+                                  chunk_size=64, bucketing=0))
     res = GraphSession.from_engine(eng).run(BFS(0))
     assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
 
@@ -152,7 +154,7 @@ def test_priority_cached_policy():
     g = small_graph(n=200, m=1000, seed=10)
     hg = build_hybrid(g, block_edges=64)
     eng = Engine(hg, EngineConfig(cached_policy="priority", pool_slots=16,
-                                  chunk_size=64))
+                                  chunk_size=64, bucketing=0))
     res = GraphSession.from_engine(eng).run(BFS(0))
     assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
 

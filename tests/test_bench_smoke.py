@@ -10,8 +10,10 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 def test_bench_smoke_writes_trajectory_point():
     out = ROOT / "BENCH_smoke.json"
+    mq_out = ROOT / "BENCH_multi_query.json"
     proc = subprocess.run(
-        [sys.executable, str(ROOT / "tools" / "bench_smoke.py"), str(out)],
+        [sys.executable, str(ROOT / "tools" / "bench_smoke.py"),
+         str(out), str(mq_out)],
         capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stderr[-2000:]
     data = json.loads(out.read_text())
@@ -23,3 +25,14 @@ def test_bench_smoke_writes_trajectory_point():
     mono = [r for r in data["results"]
             if r["name"].startswith("device_occ_monotone")]
     assert mono and all(r["derived"] == "ok" for r in mono)
+    # concurrent-plane smoke: the Q=4 PPR point ran, its physical +
+    # shared I/O exactly matches the run_many baseline, and the rows
+    # were split into the dedicated multi-query artifact
+    assert any(n.startswith("multiq_ppr_q04") for n in names)
+    base = [r for r in data["results"]
+            if r["name"].startswith("multiq_ppr_runmany_baseline")]
+    assert base and all("conservation_ok" in r["derived"] for r in base)
+    mq = json.loads(mq_out.read_text())
+    assert mq["failures"] == 0
+    assert {r["name"] for r in mq["results"]} == \
+        {n for n in names if n.startswith("multiq_")}

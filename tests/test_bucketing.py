@@ -49,9 +49,10 @@ def _run(g, query, **kw):
 
 @functools.lru_cache(maxsize=None)
 def _ref_run(kind, symmetric, qi, sync):
-    """Reference run (full refresh, global tile), shared across tests."""
+    """Reference run (full refresh, global tile — ``bucketing=0`` is
+    the escape hatch now that the default is bucketed)."""
     return _run(_graph(kind, symmetric), QUERIES[qi][1], sync=sync,
-                refresh="full")
+                refresh="full", bucketing=0)
 
 
 def assert_bit_identical(ref, res):
@@ -101,7 +102,7 @@ def test_bucketed_bit_identical_sync(qi):
 def test_bucketed_bit_identical_pallas(qi):
     _, query, symmetric = QUERIES[qi]
     g = _graph("rmat", symmetric)
-    ref = _run(g, query, refresh="full", executor="pallas")
+    ref = _run(g, query, refresh="full", executor="pallas", bucketing=0)
     buck = _run(g, query, bucketing=6, executor="pallas")
     assert_bit_identical(ref, buck)
 
@@ -134,9 +135,22 @@ def test_bucketing_partitions_tiles_by_size_class():
     for t in eng.tiles:
         assert t.Vm <= eng.Vm and t.We <= eng.We and t.EK <= eng.EK
     assert any(t.We < eng.We for t in eng.tiles)
-    # bucketing off -> one global tile
-    eng0 = Engine(hg, EngineConfig(**CFG))
+    # bucketing=0 escape hatch -> one global tile
+    eng0 = Engine(hg, EngineConfig(**CFG, bucketing=0))
     assert eng0.tiles == (Tile(Vm=eng0.Vm, We=eng0.We, EK=eng0.EK),)
+
+
+def test_bucketing_default_flipped_to_capped():
+    """PR-5 ROADMAP item: after a bench cycle confirmed the tick-cost
+    win, the default is a small bucket cap; ``bucketing=0`` remains the
+    documented global-tile escape hatch. Default-constructed engines
+    therefore get bucket-local tiles on skewed graphs."""
+    assert EngineConfig().bucketing == 6
+    g = _graph("rmat", False)
+    hg = build_hybrid(g, delta_deg=2, block_edges=64)
+    eng = Engine(hg, EngineConfig(**CFG))         # default bucketing
+    assert 1 < len(eng.tiles) <= 6
+    assert any(t.We < eng.We for t in eng.tiles)
 
 
 def test_unknown_refresh_rejected():

@@ -22,7 +22,7 @@ def _run_bfs(g, **cfg_kw):
     delta_deg = cfg_kw.pop("delta_deg", 2)
     block_edges = cfg_kw.pop("block_edges", 64)
     base = dict(lanes=2, prefetch=4, queue_depth=8, pool_slots=16,
-                chunk_size=16)
+                chunk_size=16, bucketing=0)
     base.update(cfg_kw)
     sess = GraphSession(g, EngineConfig(**base), delta_deg=delta_deg,
                         block_edges=block_edges)
@@ -56,7 +56,8 @@ def test_occupancy_trace_matches_counters():
     g = small_graph(n=200, m=1200, seed=3)
     sess = GraphSession(
         g, EngineConfig(lanes=2, prefetch=4, queue_depth=8, pool_slots=16,
-                        chunk_size=16, trace=True), block_edges=64)
+                        chunk_size=16, trace=True, bucketing=0),
+        block_edges=64)
     res = sess.run(BFS(0))
     m, trace = res.metrics, res.trace
     assert m.ticks == len(trace["inflight"])

@@ -182,7 +182,8 @@ def _view(stamp, prio, used, t=10):
 
 
 def test_policy_registry_complete():
-    assert set(CACHED_POLICIES) == {"fifo", "priority", "lru", "hybrid"}
+    assert set(CACHED_POLICIES) == {"fifo", "priority", "lru", "hybrid",
+                                    "hybrid_active"}
     with pytest.raises(ValueError, match="unknown cached_policy"):
         make_pull_policy("belady")
 
@@ -251,6 +252,56 @@ def test_hybrid_extreme_priority_stays_valid():
         _view([0, 0], [NEG_INF + 1, 1], [0, 0]))
     assert int(np.asarray(lane_valid).sum()) == 2  # both lanes valid
     assert int(eidx[0]) == 1  # rebased high priority ranks first
+
+
+def test_hybrid_active_weighs_live_active_counts():
+    # equal priorities, equal spans/fills: the active-fill variant must
+    # prefer the block with the most LIVE active vertices (b_nactive is
+    # filled into the view by Scheduler.pull), where static-fill hybrid
+    # is blind — the ROADMAP "useful work per pull" follow-on
+    sched = make_sched(B=3, policy="hybrid_active",
+                       block_io=arr([4, 4, 4]), lanes=1)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED, S_CACHED]), arr([2, 9, 1]),
+        _view([0, 0, 0], [5, 5, 5], [0, 0, 0]))
+    assert bool(lane_valid[0]) and int(eidx[0]) == 1
+
+
+def test_hybrid_active_trades_priority_against_activity():
+    # the multiplicative rebase is shared with 'hybrid': rebased
+    # priorities [3, 1] x active counts [2, 8] -> scores [6, 8]; a
+    # large enough active count outranks a modest priority edge
+    sched = make_sched(B=2, policy="hybrid_active",
+                       block_io=arr([1, 1]), lanes=2)
+    eidx, lane_valid, _ = sched.pull(
+        arr([S_CACHED, S_CACHED]), arr([2, 8]),
+        _view([0, 0], [5, 3], [0, 0]))
+    assert np.asarray(lane_valid).all()
+    assert np.asarray(eidx).tolist() == [1, 0]
+
+
+def test_split_shared_io_zero_span_and_residency():
+    # Q=2, B=3. Block 0: ZERO-SPAN submission (an early-stop-evicted
+    # block_io==0 pseudo-block re-preloading) by q0 — must count as a
+    # physical op with 0 blocks, not vanish (the explicit sub_mask is
+    # the regression: span>0 inference dropped these). Block 1: both
+    # queries submit span 3 the same tick -> first submitter physical,
+    # second shared. Block 2: q1 submits while q0 holds it resident ->
+    # shared.
+    resident = jnp.asarray([[False, False, True],
+                            [False, False, False]])
+    sub_mask = jnp.asarray([[True, True, False],
+                            [False, True, True]])
+    sub_spans = arr([[0, 3, 0], [0, 3, 2]])
+    ops_p, blk_p, ops_s, blk_s = Scheduler.split_shared_io(
+        resident, sub_mask, sub_spans)
+    assert np.asarray(ops_p).tolist() == [2, 0]
+    assert np.asarray(blk_p).tolist() == [3, 0]
+    assert np.asarray(ops_s).tolist() == [0, 2]
+    assert np.asarray(blk_s).tolist() == [0, 5]
+    # conservation: physical + shared == every submission, per query
+    assert np.asarray(ops_p + ops_s).tolist() == [2, 2]
+    assert np.asarray(blk_p + blk_s).tolist() == [3, 5]
 
 
 def test_pull_skips_blocks_without_work():

@@ -18,7 +18,7 @@ def _run_both(graph, query, **cfg_kw):
         sess = GraphSession(
             graph, EngineConfig(lanes=4, prefetch=4, queue_depth=8,
                                 pool_slots=24, chunk_size=64,
-                                executor=ex, **cfg_kw),
+                                executor=ex, bucketing=0, **cfg_kw),
             block_edges=64)
         out[ex] = sess.run(query)
     return out["gather"], out["pallas"]

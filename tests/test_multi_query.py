@@ -1,0 +1,306 @@
+"""Concurrent query plane acceptance (PR 5).
+
+The contract of ``QueryBatch`` / ``GraphService`` has two halves:
+
+  * **exactness** — every member query's ``result``, ``state``, and
+    non-I/O counters are bit-identical to a solo ``session.run`` of the
+    same query (the batch plane advances each query's own solo
+    schedule; sharing happens only at the physical I/O layer);
+  * **sharing** — the batch's total physical ``io_blocks`` is strictly
+    below the sum of the members' solo I/O, with exact conservation:
+    per query, ``io_blocks + io_blocks_shared == solo io_blocks``.
+
+Both are checked on the skewed R-MAT fixture for BFS (multi-source),
+WCC (identical queries), and PPR (f32 add combiner — the
+schedule-sensitive case that forces the per-query-schedule design).
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from conftest import oracle_bfs
+from repro.algorithms import BFS, MIS, PPR, WCC, bfs_batch, ppr_batch
+from repro.core import (EngineConfig, GraphService, GraphSession,
+                        QueryBatch)
+from repro.storage.csr import symmetrize
+from repro.storage.rmat import rmat_graph
+
+# bucketing=0 keeps the (compile-heavy) Q-stacked ticks fast; the
+# batch x bucketed-tiling interplay is covered by the trace test below
+# and by test_bucketing's solo exactness suite
+CFG = dict(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
+           chunk_size=64, bucketing=0)
+SOURCES = (0, 3, 7, 21, 50, 101, 202, 303)     # Q = 8 distinct sources
+
+NON_IO = ("edges_scanned", "vertices_processed", "reuse_activations",
+          "blocks_reused", "exec_idle_ticks", "io_active_ticks",
+          "inflight_ticks", "barriers", "ticks")
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(symmetric: bool = False):
+    """The skewed R-MAT fixture (same family as test_bucketing)."""
+    g = rmat_graph(scale=9, avg_degree=8, a=0.65, b=0.15, c=0.15, seed=0)
+    return symmetrize(g) if symmetric else g
+
+
+def make_session(g, **kw) -> GraphSession:
+    return GraphSession(g, EngineConfig(**{**CFG, **kw}), block_edges=64)
+
+
+BATCHES = {
+    "bfs": (False, lambda: tuple(BFS(s) for s in SOURCES)),
+    "wcc": (True, lambda: (WCC(),) * len(SOURCES)),
+    "ppr": (False, lambda: tuple(PPR(s, r_max=1e-4) for s in SOURCES)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _family(name):
+    """One shared (session, Q=8 batch run, 8 solo runs) per algorithm
+    family — several tests read these, so they run once."""
+    symmetric, mk = BATCHES[name]
+    queries = mk()
+    sess = make_session(_graph(symmetric))
+    batch = sess.run(QueryBatch(queries))
+    solos = [sess.run(q) for q in queries]
+    return sess, queries, batch, solos
+
+
+# ----------------------------------------------------------------------
+# acceptance: Q=8 bit-identical to solos + strictly sublinear I/O
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(BATCHES))
+def test_q8_batch_bit_identical_and_shares_io(name):
+    _, queries, batch, solos = _family(name)
+
+    for r, s in zip(batch.results, solos):
+        assert np.array_equal(r.result, s.result)
+        assert set(r.state) == set(s.state)
+        for k in s.state:
+            assert r.state[k].dtype == s.state[k].dtype
+            assert np.array_equal(r.state[k], s.state[k]), k
+        for f in NON_IO:
+            assert getattr(r.metrics, f) == getattr(s.metrics, f), f
+        # logical-I/O conservation per query: what this query's own
+        # schedule submitted splits exactly into physical + shared
+        assert r.metrics.io_ops + r.metrics.io_ops_shared \
+            == s.metrics.io_ops
+        assert r.metrics.io_blocks + r.metrics.io_blocks_shared \
+            == s.metrics.io_blocks
+        assert s.metrics.io_blocks_shared == 0  # solo never shares
+
+    solo_io = sum(s.metrics.io_blocks for s in solos)
+    assert batch.metrics.io_blocks < solo_io, \
+        "the cross-query worklist must save physical reads"
+    assert batch.metrics.io_blocks + batch.metrics.io_blocks_shared \
+        == solo_io
+
+
+def test_q8_bfs_matches_oracle_per_source():
+    _, _, batch, _ = _family("bfs")
+    g = _graph(False)
+    for r, s in zip(batch, SOURCES):
+        assert np.array_equal(r.result.astype(np.int64), oracle_bfs(g, s))
+    # bfs_batch is the QueryBatch the acceptance ran, spelled as the
+    # convenience builder
+    assert bfs_batch(SOURCES).queries == batch.query.queries
+
+
+# ----------------------------------------------------------------------
+# Q=1 parity: a one-query batch IS the solo run, counter for counter
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("query", [BFS(3), PPR(2, r_max=1e-4)],
+                         ids=["bfs", "ppr"])
+def test_q1_batch_metrics_identical_to_solo(query):
+    name = "bfs" if isinstance(query, BFS) else "ppr"
+    sess = _family(name)[0]        # reuse the family session + cache
+    solo = sess.run(query)
+    batch = sess.run(QueryBatch((query,)))
+    assert len(batch) == 1
+    r = batch[0]
+    assert np.array_equal(r.result, solo.result)
+    assert r.metrics == solo.metrics   # dataclass eq: EVERY counter
+    assert r.metrics.io_blocks_shared == 0
+
+
+# ----------------------------------------------------------------------
+# compile-cache behavior under the concurrent plane
+# ----------------------------------------------------------------------
+
+def test_query_batch_compiles_once():
+    """Q equal-(name, params) queries -> ONE compiled batch tick; a new
+    batch differing only in init data reuses it; a different Q is a new
+    shape and compiles again."""
+    sess = make_session(_graph(False))
+    sess.run(QueryBatch(tuple(BFS(s) for s in SOURCES[:4])))
+    assert sess.num_compiled == 1
+    sess.run(QueryBatch(tuple(BFS(s + 1) for s in SOURCES[:4])))
+    assert sess.num_compiled == 1
+    sess.run(QueryBatch((BFS(0), BFS(1))))          # Q=2: new shape
+    assert sess.num_compiled == 2
+    sess.run(QueryBatch((PPR(0, r_max=1e-4), PPR(1, r_max=1e-4))))
+    assert sess.num_compiled == 3                   # new (name, params)
+
+
+def test_query_batch_rejects_heterogeneous_and_multipass():
+    with pytest.raises(ValueError, match="equal \\(name, params\\)"):
+        QueryBatch((BFS(0), WCC())).build_batch()
+    with pytest.raises(ValueError, match="one compiled tick"):
+        QueryBatch((PPR(0, alpha=0.15), PPR(0, alpha=0.6))).build_batch()
+    with pytest.raises(ValueError, match="cannot join a QueryBatch"):
+        QueryBatch((MIS(0), MIS(1))).build_batch()
+    with pytest.raises(ValueError, match="at least one query"):
+        QueryBatch(())
+
+
+def test_ppr_batch_vectorized_init_matches_lifted_hooks():
+    """PPRBatch.init_batch builds the [Q, V] arrays in one vectorized
+    shot; quickstart and bench_multi_query run THIS path, so its
+    element-identity with the auto-lifted per-query hooks (which the
+    acceptance tests exercise) is what keeps their numbers under the
+    bit-identical-to-solo contract."""
+    from repro.core import lift_init
+
+    sess = make_session(_graph(False))
+    batch = ppr_batch(SOURCES, r_max=1e-4)
+    algos = batch.build_batch()
+    front_v, state_v = batch.init_batch(algos, sess.ctx)
+    front_l, state_l = lift_init(algos, sess.ctx)
+    assert front_v.dtype == front_l.dtype
+    assert np.array_equal(front_v, front_l)
+    assert set(state_v) == set(state_l)
+    for k in state_l:
+        assert state_v[k].dtype == state_l[k].dtype
+        assert np.array_equal(state_v[k], state_l[k]), k
+
+
+def test_conservation_with_zero_span_submissions():
+    """early_stop can evict a block_io==0 pseudo-block (mini chunk /
+    tail) to UNCACHED; its re-preload is a zero-SPAN but still-counted
+    submission. The batch split must classify it by the explicit
+    submitted mask — inferring submissions from span > 0 undercounts
+    io_ops and breaks the physical + shared == solo conservation."""
+    sess = make_session(_graph(False), early_stop=1, pool_slots=16)
+    queries = tuple(BFS(s) for s in SOURCES[:4])
+    batch = sess.run(QueryBatch(queries))
+    solos = [sess.run(q) for q in queries]
+    for r, s in zip(batch.results, solos):
+        assert np.array_equal(r.result, s.result)
+        assert r.metrics.io_ops + r.metrics.io_ops_shared \
+            == s.metrics.io_ops
+        assert r.metrics.io_blocks + r.metrics.io_blocks_shared \
+            == s.metrics.io_blocks
+
+
+# ----------------------------------------------------------------------
+# executor backends: the Q axis rides both gather and pallas
+# ----------------------------------------------------------------------
+
+def test_batch_pallas_parity():
+    g = _graph(False)
+    queries = tuple(PPR(s, r_max=1e-4) for s in (0, 3, 7, 21))
+    rg = make_session(g, executor="gather").run(QueryBatch(queries))
+    rp = make_session(g, executor="pallas").run(QueryBatch(queries))
+    for a, b in zip(rg.results, rp.results):
+        assert np.array_equal(a.result, b.result)
+        assert a.metrics.edges_scanned == b.metrics.edges_scanned
+    assert rg.metrics.io_blocks == rp.metrics.io_blocks
+    assert rg.metrics.io_blocks_shared == rp.metrics.io_blocks_shared
+
+
+# ----------------------------------------------------------------------
+# per-query traces keep the solo trace contract
+# ----------------------------------------------------------------------
+
+def test_batch_per_query_trace_matches_solo():
+    # bucketing=6 here on purpose: this is the one batch test on the
+    # DEFAULT bucketed tiles (lax.map over per-lane lax.switch routing)
+    sess = make_session(_graph(False), trace=True, bucketing=6)
+    queries = (BFS(0), BFS(50))
+    batch = sess.run(QueryBatch(queries))
+    for r, q in zip(batch.results, queries):
+        solo = sess.run(q)
+        assert isinstance(r.trace, dict)
+        assert len(r.trace["inflight"]) == r.metrics.ticks
+        # the trace records the query's OWN logical schedule — identical
+        # to the solo run tick for tick (io_blocks traces submissions
+        # before the cross-query dedup)
+        for k in solo.trace:
+            assert np.array_equal(r.trace[k], solo.trace[k]), k
+
+
+# ----------------------------------------------------------------------
+# GraphService: submit/drain over mixed workloads
+# ----------------------------------------------------------------------
+
+def test_graph_service_drains_in_submission_order():
+    g = _graph(True)
+    svc = GraphService(g, EngineConfig(**CFG), block_edges=64)
+    queries = [PPR(0, r_max=1e-4), BFS(1), PPR(3, r_max=1e-4),
+               MIS(0), WCC(), BFS(7)]
+    handles = [svc.submit(q) for q in queries]
+    assert svc.pending == len(queries)
+    assert not handles[0].done
+    with pytest.raises(RuntimeError, match="not drained"):
+        handles[0].result()
+    results = svc.drain()
+    assert svc.pending == 0
+    assert [r.query for r in results] == queries
+    # the two PPRs and the two BFSs each formed one shared-I/O batch
+    assert sorted(len(b.results) for b in svc.last_batches) == [2, 2]
+    assert all(b.metrics.io_blocks_shared > 0 for b in svc.last_batches)
+    ref = GraphSession(g, EngineConfig(**CFG), block_edges=64)
+    for h in handles:
+        assert h.done
+        assert np.array_equal(h.result().result,
+                              ref.run(h.query).result), h.query
+
+
+def test_graph_service_failed_query_keeps_rest_of_queue():
+    """A query that blows up during drain must not drop the other
+    submissions: resolved handles leave the queue, the failing one
+    stays pending for inspection/retry."""
+    g = _graph(False)
+    svc = GraphService(g, EngineConfig(**CFG), block_edges=64)
+    good = [svc.submit(PPR(s, r_max=1e-4)) for s in (0, 3)]
+    bad = svc.submit(BFS(source=10 ** 9))     # no such vertex
+    with pytest.raises(Exception):
+        svc.drain()
+    assert all(h.done for h in good)          # the PPR batch landed
+    assert not bad.done
+    assert svc.pending == 1                   # only the bad one remains
+
+
+def test_graph_service_rejects_nested_batch_submit():
+    svc = GraphService(_graph(False), EngineConfig(**CFG), block_edges=64)
+    with pytest.raises(ValueError, match="member queries individually"):
+        svc.submit(bfs_batch([0, 1]))
+
+
+def test_graph_service_wraps_existing_session():
+    sess = make_session(_graph(False))
+    svc = GraphService(sess)
+    assert svc.session is sess
+    with pytest.raises(ValueError, match="not both"):
+        GraphService(sess, EngineConfig())
+
+
+# ----------------------------------------------------------------------
+# RunResult.config is a snapshot, not the live engine.cfg reference
+# ----------------------------------------------------------------------
+
+def test_run_result_config_is_snapshot():
+    sess = make_session(_graph(False))
+    res = sess.run(BFS(0))
+    assert res.config == sess.engine.cfg
+    assert res.config is not sess.engine.cfg
+    # the PR-5 bugfix scenario: a later cfg swap on the engine must not
+    # rewrite already-returned provenance
+    sess.engine.cfg = dataclasses.replace(sess.engine.cfg,
+                                          pool_slots=9999)
+    assert res.config.pool_slots == CFG["pool_slots"]

@@ -29,8 +29,9 @@ from repro.core.session import GraphSession
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.hybrid import build_hybrid
 
+# bucketing=0: bit-identical results (see test_bucketing), faster compiles
 CFG = dict(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
-           chunk_size=64)
+           chunk_size=64, bucketing=0)
 BLOCK_EDGES = 64
 
 
@@ -199,15 +200,17 @@ def test_pagerank_query_mass_conserved():
     assert res.result.sum() > 0.3
 
 
-def test_hybrid_policy_end_to_end():
-    """The cost-aware hybrid pull policy converges to the same answers
-    (scheduling must never change results, only the schedule)."""
+@pytest.mark.parametrize("policy", ["hybrid", "hybrid_active"])
+def test_hybrid_policy_end_to_end(policy):
+    """The cost-aware hybrid pull policies (static fill and live
+    active-fill) converge to the same answers (scheduling must never
+    change results, only the schedule)."""
     g = small_graph(n=250, m=1500, seed=14)
-    res = make_session(g, cached_policy="hybrid").run(BFS(0))
+    res = make_session(g, cached_policy=policy).run(BFS(0))
     assert np.array_equal(res.result.astype(np.int64), oracle_bfs(g, 0))
     gs = small_graph(n=200, m=1400, seed=15, symmetric=True)
     res_f = make_session(gs, cached_policy="fifo").run(KCore(4))
-    res_h = make_session(gs, cached_policy="hybrid").run(KCore(4))
+    res_h = make_session(gs, cached_policy=policy).run(KCore(4))
     assert np.array_equal(res_f.result, res_h.result)
 
 
