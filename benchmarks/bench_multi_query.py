@@ -18,22 +18,42 @@ BFS point:
   * the ``run_many`` baseline at the same Q, for the amortization
     ratio.
 
-``us_per_call`` is real measured wall clock per batch.
-``REPRO_BENCH_SMOKE=1`` runs a single Q=4 PPR point (plus its
-baseline) for the tier-1 smoke path.
+The PR-6 aggregated-plane section runs BFS and WCC batches on both
+batch planes of a scale-10 symmetrized graph and publishes:
+
+  * ``passes_per_query`` — executor block-passes per query
+    (``Metrics.block_passes``): the aggregated plane pulls each block
+    ONCE for the whole batch, the per-query plane Q times — the gate
+    fails the build if aggregated mode does not STRICTLY reduce
+    block-passes per query at Q >= 4 (>= 3x at the full Q=16 point),
+  * ``peak_slots`` — ``pool_mode='shared'`` peak pool residency, gated
+    against the single ``pool_slots`` capacity (the per-query plane's
+    summed peaks, also published, sit near Q x ``pool_slots``),
+  * a per-query result-identity check against the per-query plane
+    (equivalence contract: same fixed points under either schedule).
+
+``us_per_call`` is real measured wall clock per batch; derived-only
+rows (conservation/monotonicity identities) omit the field instead of
+writing a 0.0 sentinel. ``REPRO_BENCH_SMOKE=1`` runs single Q=4
+points for the tier-1 smoke path.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
-from benchmarks.common import (bench_graph, emit, make_session,
+import numpy as np
+
+from benchmarks.common import (bench_graph, emit, make_session, timed,
                                timeit_query)
-from repro.algorithms import PPR, bfs_batch, ppr_batch
+from repro.algorithms import PPR, WCC, bfs_batch, ppr_batch
+from repro.core import QueryBatch
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 QS = (4,) if SMOKE else (1, 4, 16, 64)
 MONO_QS = tuple(q for q in QS if q <= 16)      # acceptance window
 R_MAX = 1e-5
+Q_AGG = 4 if SMOKE else 16                     # aggregated-plane point
 
 
 def main() -> None:
@@ -51,15 +71,19 @@ def main() -> None:
 
     # run_many baseline: same queries back-to-back, no sharing — the
     # amortization ratio is solo-sum / batch-physical. Measured at the
-    # largest monotonicity-window Q to keep the suite's runtime sane.
+    # largest monotonicity-window Q to keep the suite's runtime sane;
+    # one warm pass first, then a timed pass (real wall clock, not a
+    # 0.0 sentinel).
     Qb = max(MONO_QS)
-    solos = sess.run_many([PPR(q, r_max=R_MAX) for q in range(Qb)])
+    queries = [PPR(q, r_max=R_MAX) for q in range(Qb)]
+    sess.run_many(queries)                      # warm the compile cache
+    solos, secs_base = timed(sess.run_many, queries)
     solo_io = sum(r.metrics.io_blocks for r in solos)
     batch_res = sess.run(ppr_batch(range(Qb), r_max=R_MAX))
     ok = (batch_res.metrics.io_blocks
           + batch_res.metrics.io_blocks_shared == solo_io)
     ratio = solo_io / max(batch_res.metrics.io_blocks, 1)
-    emit(f"multiq_ppr_runmany_baseline_q{Qb:02d}", 0.0,
+    emit(f"multiq_ppr_runmany_baseline_q{Qb:02d}", secs_base,
          f"solo_io_{solo_io}_batch_io_{batch_res.metrics.io_blocks}"
          f"_amortization_{ratio:.2f}x_conservation_"
          f"{'ok' if ok else 'VIOLATION'}")
@@ -74,7 +98,7 @@ def main() -> None:
     if len(MONO_QS) > 1:
         seq = [round(io_pq[q], 6) for q in MONO_QS]
         mono = all(a > b for a, b in zip(seq, seq[1:]))
-        emit("multiq_ppr_io_per_query_monotone", 0.0,
+        emit("multiq_ppr_io_per_query_monotone", None,
              "ok" if mono else f"VIOLATION_{seq}")
         if not mono:
             raise AssertionError(
@@ -89,6 +113,47 @@ def main() -> None:
         emit(f"multiq_bfs_q{Q:02d}", secs,
              f"io_per_query_{m.io_blocks / Q:.1f}_shared_"
              f"{m.io_blocks_shared}_qps_{Q / max(secs, 1e-9):.1f}")
+
+    # ---- PR 6: aggregated plane vs per-query plane -------------------
+    g2 = bench_graph(scale=10, symmetric=True)
+    per_sess = make_session(g2, pool_slots=48)
+    agg_sess = per_sess.fork(dataclasses.replace(
+        per_sess.cfg, batch_mode="aggregated", pool_mode="shared"))
+    pool_cap = agg_sess.engine.pool_slots
+    batches = (("bfs", bfs_batch(range(Q_AGG))),
+               ("wcc", QueryBatch(tuple(WCC() for _ in range(Q_AGG)))))
+    for label, batch in batches:
+        rp, _ = timeit_query(per_sess, batch, repeats=2)
+        ra, secs_a = timeit_query(agg_sess, batch, repeats=2)
+        assert ra.batch_mode == "aggregated"
+        same = all(np.array_equal(ra[i].result, rp[i].result)
+                   for i in range(Q_AGG))
+        perq_ppq = sum(r.metrics.block_passes for r in rp) / Q_AGG
+        agg_ppq = ra[0].metrics.block_passes / Q_AGG  # shared schedule
+        speedup = perq_ppq / max(agg_ppq, 1e-9)
+        peak_agg = ra[0].metrics.peak_used_slots
+        peak_perq_sum = sum(r.metrics.peak_used_slots for r in rp)
+        emit(f"multiq_{label}_agg_q{Q_AGG:02d}", secs_a,
+             f"passes_per_query_{agg_ppq:.1f}_vs_perq_{perq_ppq:.1f}"
+             f"_reduction_{speedup:.2f}x_peak_slots_{peak_agg}_cap_"
+             f"{pool_cap}_perq_peak_sum_{peak_perq_sum}_results_"
+             f"{'ok' if same else 'MISMATCH'}")
+        if not same:
+            raise AssertionError(
+                f"aggregated {label} batch diverged from the per-query "
+                f"plane's results at Q={Q_AGG}")
+        if peak_agg > pool_cap:
+            raise AssertionError(
+                f"shared-pool peak residency {peak_agg} exceeds "
+                f"pool_slots={pool_cap} on the aggregated {label} batch")
+        # the build gate: aggregation must strictly reduce executor
+        # block-passes per query at Q>=4 (>=3x at the full Q=16 point)
+        need = 3.0 if Q_AGG >= 16 else 1.0
+        if Q_AGG >= 4 and not speedup > need:
+            raise AssertionError(
+                f"aggregated {label} block-passes/query {agg_ppq:.1f} "
+                f"is not a >{need:.0f}x reduction of the per-query "
+                f"plane's {perq_ppq:.1f} at Q={Q_AGG}")
 
 
 if __name__ == "__main__":

@@ -83,10 +83,18 @@ def ssd() -> SSDModel:
     return SSDModel(bandwidth_gbps=6.0, lanes=4)
 
 
-def emit(name: str, seconds: float, derived) -> None:
-    RESULTS.append({"name": name, "us_per_call": seconds * 1e6,
-                    "derived": str(derived)})
-    print(f"{name},{seconds * 1e6:.1f},{derived}")
+def emit(name: str, seconds: float | None, derived) -> None:
+    """Record one benchmark row. ``seconds=None`` marks a DERIVED-ONLY
+    row (a counter ratio, a conservation identity, ...): the
+    ``us_per_call`` field is omitted entirely rather than written as a
+    0.0 sentinel, so wall-clock guards (CI's perf gate filters on
+    ``us_per_call > 0``) can never mistake it for a real timing."""
+    row = {"name": name, "derived": str(derived)}
+    if seconds is not None:
+        row["us_per_call"] = seconds * 1e6
+    RESULTS.append(row)
+    us = "-" if seconds is None else f"{seconds * 1e6:.1f}"
+    print(f"{name},{us},{derived}")
 
 
 def timed(fn, *args, **kw):

@@ -43,6 +43,10 @@ def bfs_algorithm() -> Algorithm:
         edge_value=lambda msg: jnp.where(msg < INF32, msg + 1, INF32),
         activated=lambda old, new, deg: new < old,
         priority=lambda st, deg: (-st["dis"]).astype(jnp.int32),
+        # windowed form of the same expression, for the incremental
+        # refresh (evaluates only the lane-window vertices, not all V)
+        priority_at=lambda st, vids, deg: (-st["dis"][vids]).astype(
+            jnp.int32),
         on_process=None,
     )
 

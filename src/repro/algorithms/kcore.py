@@ -31,7 +31,16 @@ def kcore_algorithm(k: int) -> Algorithm:
         edge_value=lambda msg: jnp.full_like(msg, -1),
         activated=lambda old, new, deg: (old >= k) & (new < k),
         priority=lambda st, deg: jnp.zeros_like(st["deg"]),
+        priority_at=lambda st, vids, deg: jnp.zeros_like(
+            st["deg"][vids]),
         on_process=None,
+        # combine="add", but schedule-independent all the same: every
+        # removed vertex sends a constant -1 over each edge exactly once
+        # (the crossing test fires once per vertex), so the final
+        # degrees are deg0 - #removed-neighbors under ANY pull order —
+        # integer peeling is confluent. Opts k-core into the aggregated
+        # batch plane, which the combine=="min" default would refuse
+        schedule_independent=True,
     )
 
 

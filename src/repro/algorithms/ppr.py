@@ -47,9 +47,16 @@ def ppr_algorithm(alpha: float = 0.15, r_max: float = 1e-6) -> Algorithm:
         dens = st["r"] / jnp.maximum(deg.astype(jnp.float32), 1.0)
         return jnp.clip(dens * 1e9, 0, 2 ** 30).astype(jnp.int32)
 
+    def priority_at(st, vids, deg):
+        # windowed form of priority(): same elementwise f32 ops over
+        # the gathered rows only, so values match bit-for-bit
+        dens = st["r"][vids] / jnp.maximum(deg.astype(jnp.float32), 1.0)
+        return jnp.clip(dens * 1e9, 0, 2 ** 30).astype(jnp.int32)
+
     return Algorithm(name="ppr", key="r", combine="add", apply=apply,
                      edge_value=lambda msg: msg, activated=activated,
-                     priority=priority, on_process=on_process,
+                     priority=priority, priority_at=priority_at,
+                     on_process=on_process,
                      params=(alpha, r_max))
 
 

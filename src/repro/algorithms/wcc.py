@@ -32,6 +32,10 @@ def wcc_algorithm() -> Algorithm:
         edge_value=lambda msg: msg,
         activated=lambda old, new, deg: new < old,
         priority=lambda st, deg: (-st["label"]).astype(jnp.int32),
+        # windowed form of the same expression, for the incremental
+        # refresh (evaluates only the lane-window vertices, not all V)
+        priority_at=lambda st, vids, deg: (-st["label"][vids]).astype(
+            jnp.int32),
         on_process=None,
     )
 

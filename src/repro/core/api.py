@@ -119,6 +119,29 @@ class Algorithm:
     priority: Callable[[StateT, jnp.ndarray], jnp.ndarray]
     #: optional consumption step: (state, processed bool[V']) -> state
     on_process: Callable[[StateT, jnp.ndarray], StateT] | None = None
+    #: optional *windowed* priority: (state, vids[int32 ...],
+    #: deg[...]) -> int32 priorities at exactly those vertex ids
+    #: (``deg`` is the degree table gathered at ``vids``). When
+    #: present, the incremental worklist refresh re-evaluates priority
+    #: only inside the pulled lanes' vertex/edge windows (the only rows
+    #: a tick can change) instead of recomputing ``priority`` over all
+    #: V vertices every tick. Must satisfy ``priority_at(state, vids,
+    #: deg[vids]) == priority(state, deg)[vids]`` elementwise — the
+    #: ``check_refresh`` witness compares the maintained per-vertex
+    #: priorities against the full reduction every tick
+    priority_at: Callable[[StateT, jnp.ndarray, jnp.ndarray],
+                          jnp.ndarray] | None = None
+    #: schedule-independence declaration for the aggregated batch plane
+    #: (``EngineConfig.batch_mode='aggregated'``). ``None`` derives the
+    #: default: monotone min-combiner relaxations without an
+    #: ``on_process`` mutation converge to one fixed point under ANY
+    #: pull order (the GraphMP/DFOGraph shared-scan argument), so they
+    #: are eligible; everything else is not. An algorithm whose add
+    #: combiner is nevertheless exact-and-once (integer constant
+    #: messages fired by a monotone crossing predicate, e.g. k-core's
+    #: fetchSub) opts in explicitly with ``True``; a min-combiner whose
+    #: hooks smuggle in schedule dependence opts out with ``False``
+    schedule_independent: bool | None = None
     #: every value the callbacks close over (e.g. PPR's alpha/r_max) must
     #: appear here (or be folded into ``name``): the engine's compile
     #: cache keys on ``(name, params, cfg)``, so omitting a parameter
@@ -145,6 +168,26 @@ class Algorithm:
 # ----------------------------------------------------------------------
 # concurrent query plane: QueryBatch + batched-hook auto-lifting
 # ----------------------------------------------------------------------
+
+def aggregation_eligible(algo: Algorithm) -> bool:
+    """Can a batch of this algorithm run on the AGGREGATED plane?
+
+    The aggregated plane executes one merged pull order for all Q
+    queries, so per-query schedules differ from solo runs by design;
+    only algorithms whose fixed point is *schedule-independent* may use
+    it. The default test is ``combine == 'min' and on_process is None``
+    — asynchronous monotone relaxation (BFS/WCC) reaches the same fixed
+    point under any block order. ``Algorithm.schedule_independent``
+    overrides in either direction (k-core's integer fetchSub opts in;
+    see the field docstring). PPR/PageRank's f32 forward push is
+    schedule-dependent even in exact arithmetic and stays on the
+    per-query plane — :class:`~repro.core.session.GraphSession` falls
+    back transparently, :meth:`~repro.core.engine.Engine.run_batch`
+    refuses loudly.
+    """
+    if algo.schedule_independent is not None:
+        return bool(algo.schedule_independent)
+    return algo.combine == "min" and algo.on_process is None
 
 def lift_init(algos: list[Algorithm],
               ctx: AlgoContext) -> tuple[np.ndarray, StateT]:
@@ -192,6 +235,16 @@ class QueryBatch(Query):
     :class:`~repro.core.session.BatchResult`: per-query ``RunResult``s
     (bit-identical to solo runs) plus aggregate metrics whose
     ``io_blocks`` counts each physically-read block once.
+
+    **Routing (PR 6):** under ``EngineConfig.batch_mode='aggregated'``
+    a batch whose algorithm is :func:`aggregation_eligible`
+    (schedule-independent min-combiner fixed points: BFS/WCC/KCore)
+    runs on the aggregated plane — ONE merged pull order and one
+    executor pass per pulled block serving all Q queries, same fixed
+    point but not the solo schedule. Ineligible batches (``add``
+    combiners: PPR/PageRank) transparently fall back to the per-query
+    plane, keeping their bit-identical-to-solo contract;
+    ``BatchResult.batch_mode`` records which plane actually ran.
     """
 
     queries: tuple[Query, ...]

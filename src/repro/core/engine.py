@@ -66,6 +66,25 @@ is the paper's "reuse active blocks in memory" claim lifted across
 queries. Per-query results and counters stay bit-identical to solo runs
 by construction.
 
+The **aggregated batch plane** (PR 6, ``EngineConfig.batch_mode=
+"aggregated"``) replaces the Q per-query schedules with ONE merged
+schedule, legal for schedule-independent algorithms (min-combiners and
+explicit opt-ins — see :func:`repro.core.api.aggregation_eligible`):
+each tick the per-query worklist metadata is merged
+(:meth:`~repro.core.scheduler.Scheduler.aggregate_worklist` — sum of
+active counts, max of per-query-rebased priorities), each pulled block
+is expanded ONCE against the Q-stacked state
+(:meth:`~repro.core.executor.ExecutorBackend.execute_many`), and ONE
+real buffer pool admits blocks for the whole batch —
+``pool_mode="shared"`` caps batch peak residency at ``pool_slots``
+(vs Q x ``pool_slots`` on the per-query plane), ``"per_query"`` keeps
+the Q x capacity for memory-parity schedule comparisons. Batch compute
+drops from O(Q·blocks) toward O(blocks) (``Metrics.block_passes``);
+per-query results are *equivalent* to solo — same fixed point, same
+extract output — but NOT bit-parity: the pull order is shared by
+design, which is why add-combiner algorithms (PPR/PageRank) are
+refused and routed to the per-query plane instead.
+
 Mini vertices (deg <= delta_deg, Sec. 5.2) are grouped into pseudo-blocks
 with zero I/O cost — they are always memory-resident, which is exactly the
 hybrid storage architecture's point.
@@ -84,7 +103,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Algorithm
+from repro.core.api import Algorithm, aggregation_eligible
 from repro.core.executor import ExecTables, Tile, make_executor
 from repro.core.pool import BufferPool
 from repro.core.scheduler import (S_CACHED, S_LOADING, PullView,
@@ -96,11 +115,19 @@ TRACE_LEN = 16384
 
 _COUNTERS = ("io_ops", "io_blocks", "edges_scanned", "vertices_processed",
              "reuse_activations", "blocks_reused", "exec_idle_ticks",
-             "io_active_ticks", "inflight_ticks", "barriers", "ticks")
+             "io_active_ticks", "inflight_ticks", "barriers", "ticks",
+             "block_passes", "peak_used_slots")
 
 #: batch-only counters: preload submissions served by another query's
 #: resident / in-flight copy instead of new device traffic
 _SHARED_COUNTERS = ("io_ops_shared", "io_blocks_shared")
+
+#: counters that stay per-query under the AGGREGATED batch plane (their
+#: increments come from each query's own frontier masks); every other
+#: counter there describes the ONE shared schedule and is replicated
+#: into each query's Metrics verbatim — see :func:`batch_totals`
+_PER_QUERY_COUNTERS = ("edges_scanned", "vertices_processed",
+                       "reuse_activations")
 
 
 # ---- 64-bit counters as uint32 limb pairs ----------------------------
@@ -152,6 +179,21 @@ class EngineConfig:
     #                             (re-reduce all V vertices per tick)
     check_refresh: bool = False  # debug: per-tick incremental-vs-full
     #                             comparison, traced as refresh_mismatch
+    batch_mode: str = "per_query"  # concurrent-query execution plane:
+    #                             'per_query' (PR 5 compat: Q solo
+    #                             schedules, bit-parity, shared I/O) |
+    #                             'aggregated' (PR 6: ONE merged pull
+    #                             order, one executor pass per block
+    #                             serving all Q queries — equivalence,
+    #                             not parity; schedule-independent
+    #                             algorithms only)
+    pool_mode: str = "per_query"  # aggregated-plane pool capacity:
+    #                             'per_query' = Q x pool_slots (memory
+    #                             parity with the per-query plane) |
+    #                             'shared' = ONE pool_slots budget with
+    #                             cross-query admission (batch peak
+    #                             residency == a solo run's); requires
+    #                             batch_mode='aggregated'
     max_ticks: int = 200_000
     trace: bool = False         # record per-tick pipeline occupancy
 
@@ -183,6 +225,17 @@ class Metrics:
     # the pre-batch counters.
     io_ops_shared: int = 0
     io_blocks_shared: int = 0
+    # ---- schedule-cost / residency accounting (PR 6) ------------------
+    # block_passes counts executor lane slots actually executed (one per
+    # pulled block per tick). On the per-query plane each query pays its
+    # own passes; on the aggregated plane ONE pass serves all Q queries,
+    # so block_passes (replicated per query) / Q is the batch-compute
+    # win the aggregated mode exists for. peak_used_slots is the max
+    # buffer-pool occupancy ever observed (a max, not a sum — summing
+    # per-query peaks, as Metrics.__add__ does, gives the per-query
+    # plane's Q x pool_slots residency figure by construction).
+    block_passes: int = 0
+    peak_used_slots: int = 0
 
     @property
     def io_bytes(self) -> int:
@@ -196,6 +249,28 @@ class Metrics:
         return Metrics(**{f.name: getattr(self, f.name)
                           + getattr(other, f.name)
                           for f in dataclasses.fields(self)})
+
+
+def batch_totals(metrics: list[Metrics], batch_mode: str) -> Metrics:
+    """Whole-batch totals for a :meth:`Engine.run_batch` metrics list.
+
+    On the per-query plane every counter is per-query, so the total is
+    the plain sum. On the aggregated plane the schedule counters (I/O,
+    ticks, block_passes, peak_used_slots, ...) describe the ONE shared
+    schedule and are replicated verbatim into every query's
+    ``Metrics`` — summing them would overcount Q-fold — so totals take
+    them from ``metrics[0]`` and sum only the ``_PER_QUERY_COUNTERS``
+    (each query's own frontier work).
+    """
+    total = metrics[0]
+    for m in metrics[1:]:
+        total = total + m
+    if batch_mode != "aggregated" or len(metrics) < 2:
+        return total
+    agg = dataclasses.replace(metrics[0])
+    for k in _PER_QUERY_COUNTERS:
+        setattr(agg, k, getattr(total, k))
+    return agg
 
 
 class Engine:
@@ -217,6 +292,28 @@ class Engine:
                 "full mismatch count into the trace; it requires "
                 "trace=True and refresh='incremental' (got "
                 f"trace={cfg.trace}, refresh={cfg.refresh!r})")
+        if cfg.batch_mode not in ("per_query", "aggregated"):
+            raise ValueError(
+                f"unknown batch_mode {cfg.batch_mode!r}; "
+                "available: ['aggregated', 'per_query']")
+        if cfg.pool_mode not in ("per_query", "shared"):
+            raise ValueError(
+                f"unknown pool_mode {cfg.pool_mode!r}; "
+                "available: ['per_query', 'shared']")
+        if cfg.pool_mode == "shared" and cfg.batch_mode != "aggregated":
+            raise ValueError(
+                "pool_mode='shared' is the aggregated plane's "
+                "cross-query admission budget; the per-query plane "
+                "gives every query its own pool_slots by construction "
+                "— set batch_mode='aggregated' (or leave pool_mode="
+                "'per_query')")
+        if cfg.batch_mode == "aggregated" and cfg.sync:
+            raise ValueError(
+                "batch_mode='aggregated' merges Q asynchronous "
+                "worklists into one pull order; the synchronous "
+                "special case (sync=True) pins each query to "
+                "per-iteration barriers and is only supported on the "
+                "per-query plane")
         self.hg = hg
         self.cfg = cfg
         self._build_tables()
@@ -508,6 +605,13 @@ class Engine:
                 nact_f, prio_f = sched.refresh(algo, state, front2)
                 mismatch = (jnp.sum(nact_f != b_nactive2)
                             + jnp.sum(prio_f != b_prio2)).astype(i32)
+                if algo.priority_at is not None:
+                    # windowed-priority witness (PR 6): the threaded
+                    # v_prio must be exact at every frontier vertex —
+                    # the only positions future reductions read
+                    vp_f = algo.priority(state, self.t_v_deg).astype(i32)
+                    mismatch = mismatch + jnp.sum(
+                        front2 & (vp_f != v_prio2)).astype(i32)
 
             # ---- 7. finish: reactivated blocks re-enter cached queue ----
             fin = sched.finish(b_state, b_stamp, c["b_reuse"], b_nactive2,
@@ -550,6 +654,14 @@ class Engine:
                                               io_active)
             cnt["inflight_ticks"] = _c64_add(cnt["inflight_ticks"], occ)
             cnt["ticks"] = _c64_add(cnt["ticks"], jnp.ones((), i32))
+            cnt["block_passes"] = _c64_add(cnt["block_passes"],
+                                           lanes_used)
+            # peak residency is a MAX, not a sum: tracked in the low
+            # limb (used_slots is i32, never wraps)
+            cnt["peak_used_slots"] = (
+                cnt["peak_used_slots"][0],
+                jnp.maximum(cnt["peak_used_slots"][1],
+                            pre.used_slots.astype(jnp.uint32)))
             trace = c["trace"]
             if cfg.trace:
                 ti = jnp.minimum(t, TRACE_LEN - 1)
@@ -588,7 +700,7 @@ class Engine:
     # concurrent query plane (PR 5): Q-stacked execution, shared I/O
     # ------------------------------------------------------------------
     def run_batch(self, algo: Algorithm, init_fronts: np.ndarray,
-                  init_states: dict
+                  init_states: dict, batch_mode: str | None = None
                   ) -> tuple[dict, list[Metrics], list[dict] | None]:
         """Execute Q stacked instances of ``algo`` in ONE engine loop.
 
@@ -607,17 +719,24 @@ class Engine:
         ``io_blocks_shared`` the rest (physical + shared == the solo
         run's logical I/O, exactly).
 
-        Why per-query schedules instead of one aggregated pull order:
-        add-combiner algorithms (PPR's forward push) have
-        schedule-dependent results — even in exact arithmetic the final
-        (p, r) split depends on how residuals interleave — so any
-        shared pull order would break the solo-equivalence contract
-        the query API promises. Min-combiner algorithms would tolerate
-        it; an opt-in aggregated mode for those is a recorded
-        follow-on. The Q axis is mapped (``lax.map``/scan), not
-        vmapped: the scanned body is the solo tick's exact computation
-        (bit-parity by construction) and needs no batching rules for
-        the per-lane ``lax.switch`` routing or the pallas kernel.
+        Why per-query schedules are the *default*: add-combiner
+        algorithms (PPR's forward push) have schedule-dependent results
+        — even in exact arithmetic the final (p, r) split depends on
+        how residuals interleave — so any shared pull order would break
+        the solo-equivalence contract the query API promises. On this
+        plane the Q axis is mapped (``lax.map``/scan), not vmapped: the
+        scanned body is the solo tick's exact computation (bit-parity
+        by construction) and needs no batching rules for the per-lane
+        ``lax.switch`` routing or the pallas kernel.
+
+        ``batch_mode`` (``None`` = ``cfg.batch_mode``) selects the
+        plane per call: ``"aggregated"`` runs the PR 6 merged-schedule
+        plane instead (one pull order, one executor pass per block for
+        all Q queries, one real pool — see the module docstring) and
+        raises ``ValueError`` for algorithms that are not
+        schedule-independent (``api.aggregation_eligible``); the
+        service/session layer catches that routing decision *before*
+        calling, falling back to per-query transparently.
 
         A converged query's rows pass through untouched (``lax.cond``)
         while the loop drains the others, so its counters freeze at the
@@ -631,6 +750,26 @@ class Engine:
         — batches differing only in init data share the compilation.
         """
         cfg = self.cfg
+        mode = cfg.batch_mode if batch_mode is None else batch_mode
+        if mode not in ("per_query", "aggregated"):
+            raise ValueError(
+                f"unknown batch_mode {mode!r}; "
+                "available: ['aggregated', 'per_query']")
+        if mode == "aggregated":
+            if not aggregation_eligible(algo):
+                raise ValueError(
+                    f"algorithm {algo.name!r} is not schedule-"
+                    f"independent (combine={algo.combine!r}, "
+                    f"on_process={'set' if algo.on_process else 'None'},"
+                    f" schedule_independent="
+                    f"{algo.schedule_independent}): a shared pull "
+                    "order would change its per-query results — run "
+                    "it on the per-query plane (batch_mode="
+                    "'per_query'), as GraphService does automatically")
+            if cfg.sync:
+                raise ValueError(
+                    "batch_mode='aggregated' is asynchronous-only; "
+                    "sync=True requires the per-query plane")
         fronts = np.asarray(init_fronts, dtype=bool)
         if fronts.ndim != 2:
             raise ValueError(
@@ -638,10 +777,11 @@ class Engine:
         Q = int(fronts.shape[0])
         front0 = jnp.asarray(fronts & np.asarray(self.t_is_real)[None, :])
         state0 = {k: jnp.asarray(v) for k, v in init_states.items()}
-        key = ("batch", Q, algo.name, algo.params, cfg)
+        key = ("batch", mode, Q, algo.name, algo.params, cfg)
         if key not in self._compiled:
-            self._compiled[key] = jax.jit(
-                functools.partial(self._run_batch_impl, algo))
+            impl = self._run_batch_agg_impl if mode == "aggregated" \
+                else self._run_batch_impl
+            self._compiled[key] = jax.jit(functools.partial(impl, algo))
         out_state, counters, trace = self._compiled[key](front0, state0)
         counters = {k: (np.asarray(hi), np.asarray(lo))
                     for k, (hi, lo) in counters.items()}
@@ -712,6 +852,204 @@ class Engine:
 
         out = jax.lax.while_loop(cond, step, carry0)
         return out["state"], out["counters"], out["trace"]
+
+    # ------------------------------------------------------------------
+    # aggregated batch plane (PR 6): one merged schedule for Q queries
+    # ------------------------------------------------------------------
+    def _run_batch_agg_impl(self, algo: Algorithm, fronts0, states0):
+        """One merged pull order serving Q stacked queries (PR 6).
+
+        ONE shared control plane (block states, deadlines, pool
+        accounting, pull history) drives the tick; only the worklist
+        metadata, frontier, and algorithm state stay per-query. Each
+        tick merges the Q metadata vectors
+        (:meth:`Scheduler.aggregate_worklist`), preloads/pulls against
+        the merged worklist once, expands each pulled block ONCE over
+        the Q-stacked state (:meth:`ExecutorBackend.execute_many`),
+        then refreshes each query's metadata from the same lane
+        windows (``lax.map``, so the incremental full-rebuild
+        ``lax.cond`` stays a real branch per query). Finish/activate
+        run on the cross-query active refcount ``sum_q nact`` — a
+        block leaves the pool only when NO query has work in it.
+        """
+        cfg = self.cfg
+        B = self.B
+        i32 = jnp.int32
+        Q = fronts0.shape[0]
+        sched, executor = self.scheduler, self.executor
+        pool = self.pool.fork(
+            self.pool_slots if cfg.pool_mode == "shared"
+            else Q * self.pool_slots)
+        incremental = cfg.refresh == "incremental"
+        check = cfg.check_refresh and incremental
+
+        nact0, prio0 = jax.lax.map(
+            lambda a: sched.refresh(algo, a[0], a[1]),
+            (states0, fronts0))
+        b_state0 = sched.initial_block_state(jnp.sum(nact0, axis=0))
+        zq = jnp.zeros(Q, jnp.uint32)
+        counters0 = {k: (zq, zq) for k in _COUNTERS + _SHARED_COUNTERS}
+        trace_keys = ("io_blocks", "lanes", "edges", "frontier",
+                      "inflight", "io_active", "used_slots") \
+            + (("refresh_mismatch",) if check else ())
+        trace0 = {k: jnp.zeros(TRACE_LEN, i32) for k in trace_keys} \
+            if cfg.trace else {}
+        carry0 = dict(
+            state=states0, front=fronts0, b_state=b_state0,
+            b_deadline=jnp.zeros(B, i32), b_stamp=jnp.zeros(B, i32),
+            b_reuse=jnp.zeros(B, i32), b_used=jnp.zeros(B, i32),
+            b_nactive=nact0, b_prio=prio0,
+            used_slots=jnp.zeros((), i32), t=jnp.zeros((), i32),
+            counters=counters0, trace=trace0)
+        if incremental:
+            carry0["v_prio"] = jax.lax.map(
+                lambda st: algo.priority(st, self.t_v_deg).astype(i32),
+                states0)
+
+        def cond(c):
+            work = jnp.any(c["front"]) \
+                | jnp.any(c["b_state"] == S_LOADING)
+            return (c["t"] < cfg.max_ticks) & work
+
+        def tick(c):
+            state, front = c["state"], c["front"]
+            t = c["t"]
+            cnt = dict(c["counters"])
+            nact_agg, prio_agg = Scheduler.aggregate_worklist(
+                c["b_nactive"], c["b_prio"])
+
+            # ---- 1. async I/O completions ------------------------------
+            comp = sched.complete_io(c["b_state"], c["b_deadline"],
+                                     c["b_stamp"], t)
+            b_state, b_stamp = comp.b_state, comp.b_stamp
+
+            # ---- 2. preload against the MERGED worklist ----------------
+            pre = sched.preload(b_state, c["b_deadline"], prio_agg,
+                                nact_agg, c["used_slots"], pool, t)
+            b_state, b_deadline = pre.b_state, pre.b_deadline
+            used_slots = pre.used_slots
+
+            # ---- 3. ONE pull for the whole batch -----------------------
+            eidx, lane_valid, b_used = sched.pull(
+                b_state, nact_agg,
+                PullView(b_stamp=b_stamp, b_prio=prio_agg,
+                         b_used=c["b_used"], t=t))
+
+            # ---- 4. ONE executor pass per block, Q-stacked state -------
+            res = executor.execute_many(algo, state, front, eidx,
+                                        lane_valid)
+            state = res.state
+
+            # ---- 5. per-query frontier update + reuse accounting -------
+            front2 = (front & ~res.processed) | res.activated
+            resident_v = (b_state[self.t_v_sched] == S_CACHED) | \
+                         (b_state[self.t_v_sched] == S_LOADING)
+            reuse_q = jnp.sum(res.activated & resident_v[None, :],
+                              axis=1).astype(i32)
+
+            # ---- 6. per-query worklist refresh (lax.map keeps the
+            # incremental full-rebuild lax.cond a real branch) -----------
+            if incremental:
+                nact2, prio2, v_prio2 = jax.lax.map(
+                    lambda a: sched.refresh_delta(
+                        algo, a[0], a[1], a[2], a[3], eidx, lane_valid),
+                    (state, front2, c["v_prio"], c["b_prio"]))
+            else:
+                nact2, prio2 = jax.lax.map(
+                    lambda a: sched.refresh(algo, a[0], a[1]),
+                    (state, front2))
+            if check:
+                nact_f, prio_f = jax.lax.map(
+                    lambda a: sched.refresh(algo, a[0], a[1]),
+                    (state, front2))
+                mismatch = (jnp.sum(nact_f != nact2)
+                            + jnp.sum(prio_f != prio2)).astype(i32)
+                if algo.priority_at is not None:
+                    vp_f = jax.lax.map(
+                        lambda st: algo.priority(
+                            st, self.t_v_deg).astype(i32), state)
+                    mismatch = mismatch + jnp.sum(
+                        front2 & (vp_f != v_prio2)).astype(i32)
+            nact2_agg = jnp.sum(nact2, axis=0)
+
+            # ---- 7./8. finish + activation on the cross-query refcount -
+            fin = sched.finish(b_state, b_stamp, c["b_reuse"],
+                               nact2_agg, eidx, lane_valid, used_slots,
+                               pool, t)
+            b_state, b_stamp = fin.b_state, fin.b_stamp
+            b_reuse, used_slots = fin.b_reuse, fin.used_slots
+            b_state, b_stamp = sched.activate(b_state, b_stamp,
+                                              nact2_agg, t)
+
+            # ---- 10. counters & trace: schedule-wide values broadcast
+            # into every query's accumulators, _PER_QUERY_COUNTERS from
+            # each query's own masks (see batch_totals) ------------------
+            lanes_used = jnp.sum(lane_valid).astype(i32)
+            cnt["io_ops"] = _c64_add(cnt["io_ops"], pre.io_ops)
+            cnt["io_blocks"] = _c64_add(cnt["io_blocks"], pre.io_blocks)
+            cnt["edges_scanned"] = _c64_add(cnt["edges_scanned"],
+                                            res.edges_scanned)
+            cnt["vertices_processed"] = _c64_add(
+                cnt["vertices_processed"], res.vertices_processed)
+            cnt["reuse_activations"] = _c64_add(cnt["reuse_activations"],
+                                                reuse_q)
+            cnt["blocks_reused"] = _c64_add(cnt["blocks_reused"],
+                                            fin.blocks_reused)
+            cnt["exec_idle_ticks"] = _c64_add(
+                cnt["exec_idle_ticks"],
+                ((lanes_used == 0) & jnp.any(front2)).astype(i32))
+            io_active = (comp.inflight + pre.io_ops > 0).astype(i32)
+            occ = pre.inflight + pre.io_ops
+            cnt["io_active_ticks"] = _c64_add(cnt["io_active_ticks"],
+                                              io_active)
+            cnt["inflight_ticks"] = _c64_add(cnt["inflight_ticks"], occ)
+            cnt["ticks"] = _c64_add(cnt["ticks"], jnp.ones((), i32))
+            cnt["block_passes"] = _c64_add(cnt["block_passes"],
+                                           lanes_used)
+            cnt["peak_used_slots"] = (
+                cnt["peak_used_slots"][0],
+                jnp.maximum(cnt["peak_used_slots"][1],
+                            pre.used_slots.astype(jnp.uint32)))
+            trace = c["trace"]
+            if cfg.trace:
+                ti = jnp.minimum(t, TRACE_LEN - 1)
+                trace = {
+                    "io_blocks": trace["io_blocks"].at[ti].set(
+                        pre.io_blocks),
+                    "lanes": trace["lanes"].at[ti].set(lanes_used),
+                    "edges": trace["edges"].at[ti].set(
+                        jnp.sum(res.edges_scanned).astype(i32)),
+                    "frontier": trace["frontier"].at[ti].set(
+                        jnp.sum(front2).astype(i32)),
+                    "inflight": trace["inflight"].at[ti].set(occ),
+                    "io_active": trace["io_active"].at[ti].set(
+                        io_active),
+                    "used_slots": trace["used_slots"].at[ti].set(
+                        used_slots),
+                }
+                if check:
+                    trace["refresh_mismatch"] = \
+                        c["trace"]["refresh_mismatch"].at[ti].set(
+                            mismatch)
+
+            out_c = dict(state=state, front=front2, b_state=b_state,
+                         b_deadline=b_deadline, b_stamp=b_stamp,
+                         b_reuse=b_reuse, b_used=b_used,
+                         b_nactive=nact2, b_prio=prio2,
+                         used_slots=used_slots, t=t + 1,
+                         counters=cnt, trace=trace)
+            if incremental:
+                out_c["v_prio"] = v_prio2
+            return out_c
+
+        out = jax.lax.while_loop(cond, tick, carry0)
+        trace = out["trace"]
+        if cfg.trace:
+            # one shared schedule -> one trace, replicated per query so
+            # run_batch's per-query decode applies unchanged
+            trace = {k: jnp.broadcast_to(v[None, :], (Q, TRACE_LEN))
+                     for k, v in trace.items()}
+        return out["state"], out["counters"], trace
 
 
 # ----------------------------------------------------------------------

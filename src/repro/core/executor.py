@@ -38,15 +38,23 @@ floating-point ``add`` state) are bit-identical to the ``bucketing=0``
 compat default.
 
 **The Q axis** (concurrent query plane, PR 5): executors are written
-against ONE query's `[V]` state and the engine maps the whole tick —
-executor included — over the batch's leading Q axis (`lax.map`, i.e.
-scan). Each query's pass is therefore the solo computation verbatim:
-per-lane bucket routing and tile sizes are unchanged, the scatter order
-per query is the solo order (bit-parity by construction), and the
-pallas kernel needs no vmap batching rule. Both backends carry the Q
-axis this way with zero executor-code changes; a Q-vmapped fast path
-(batched expansion, one scatter over `[Q, V]`) is a possible follow-on
-for min-combiner algorithms whose results are schedule-independent.
+against ONE query's `[V]` state and the per-query batch plane maps the
+whole tick — executor included — over the batch's leading Q axis
+(`lax.map`, i.e. scan). Each query's pass is therefore the solo
+computation verbatim: per-lane bucket routing and tile sizes are
+unchanged, the scatter order per query is the solo order (bit-parity by
+construction), and the pallas kernel needs no vmap batching rule.
+
+**Aggregated mode** (PR 6): for schedule-independent algorithms the
+engine's aggregated plane pulls ONE merged worklist and calls
+:meth:`ExecutorBackend.execute_many`, which `jax.vmap`s the solo
+execute over the Q-stacked `(state, front)` with the lane selection
+held fixed. The block windows, bucket routing, and edge indices are
+computed once per pulled block and the expansion/scatter vectorize
+over a `[Q, ...]` axis — one executor pass per block serving all Q
+queries, instead of Q sequential passes. Both backends get this for
+free (`lax.switch` keeps its unbatched lane index; the pallas kernel
+batches under vmap in interpret mode).
 
 New backends register via :data:`EXECUTORS`.
 """
@@ -162,6 +170,34 @@ class ExecutorBackend:
             state=state, processed=processed, activated=activated,
             edges_scanned=jnp.sum(degs).astype(jnp.int32),
             vertices_processed=jnp.sum(vmask).astype(jnp.int32))
+
+    def execute_many(self, algo: Algorithm, states, fronts, eidx,
+                     lane_valid) -> ExecResult:
+        """Aggregated batch mode: expand each pulled block ONCE against
+        the Q-stacked state.
+
+        ``states`` / ``fronts`` carry a leading Q axis; ``eidx`` /
+        ``lane_valid`` are the merged worklist's single lane selection,
+        shared by every query. The solo :meth:`execute` is ``jax.vmap``d
+        over the stacked axis, so lane windows, bucket routing
+        (``lax.switch`` on the unbatched lane index), and edge gathers
+        are computed once per pulled block while apply/expand/scatter
+        vectorize over ``[Q, ...]``. Returns an :class:`ExecResult`
+        whose fields all carry the leading Q axis (``edges_scanned`` /
+        ``vertices_processed`` become per-query ``i32[Q]`` — frontier
+        masks differ per query even under the shared pull order).
+        """
+
+        def one(state, front):
+            r = self.execute(algo, state, front, eidx, lane_valid)
+            return (r.state, r.processed, r.activated, r.edges_scanned,
+                    r.vertices_processed)
+
+        state, processed, activated, nedges, nverts = jax.vmap(one)(
+            states, fronts)
+        return ExecResult(state=state, processed=processed,
+                          activated=activated, edges_scanned=nedges,
+                          vertices_processed=nverts)
 
     def _execute_bucketed(self, algo, state, front, eidx,
                           lane_valid) -> ExecResult:

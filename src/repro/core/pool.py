@@ -9,6 +9,21 @@ than ``early_stop`` consecutive times.
 All methods are pure jnp functions of the carried ``used_slots`` scalar
 and per-block masks, so they compose inside the engine's
 ``jax.lax.while_loop`` tick unchanged.
+
+**Batch capacity modes (PR 6):** on the per-query batch plane every
+query budgets its OWN ``pool_slots`` (each carries a private
+``used_slots``), so batch peak residency is Q x ``pool_slots``. The
+aggregated plane holds ONE real pool with cross-query admission — every
+query's preload demand competes for the same slots and a resident block
+serves all Q queries at once. :meth:`BufferPool.fork` builds that
+pool: capacity ``pool_slots`` under ``pool_mode='shared'`` (batch peak
+residency == a solo run's), or Q x ``pool_slots`` under
+``pool_mode='per_query'`` (memory parity with the per-query plane, for
+apples-to-apples schedule comparisons). Admission/release/eviction
+accounting is unchanged on the merged plane because a block is
+*finished* only when NO query has active vertices left in it — the
+aggregated active counts the scheduler feeds in already encode the
+cross-query refcount.
 """
 from __future__ import annotations
 
@@ -28,6 +43,14 @@ class BufferPool:
         self.slots = int(slots)
         self.block_io = block_io
         self.early_stop = int(early_stop)
+
+    # ------------------------------------------------------------------
+    def fork(self, slots: int) -> "BufferPool":
+        """A pool over the same block table with a different capacity —
+        the aggregated batch plane's unit (see the module docstring):
+        ``pool.fork(pool.slots)`` is the shared-capacity mode,
+        ``pool.fork(Q * pool.slots)`` the per-query-parity mode."""
+        return BufferPool(slots, self.block_io, early_stop=self.early_stop)
 
     # ------------------------------------------------------------------
     def free(self, used_slots: jnp.ndarray) -> jnp.ndarray:

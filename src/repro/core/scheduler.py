@@ -16,12 +16,15 @@ This module owns the per-block control plane of the engine tick:
     ``lru``, and the cost-aware ``hybrid`` (priority × static block
     fill) / ``hybrid_active`` (priority × live active count) are
     provided and new policies register via :data:`CACHED_POLICIES`,
-  * the **cross-query worklist** aggregation for the concurrent query
-    plane (:meth:`Scheduler.split_shared_io`): per-query preload
-    submissions are deduplicated across the batch's Q-stacked block
-    states, so one physical read serves every query that wants the
-    block while it is resident — the other queries' submissions are
-    accounted as *shared* I/O instead of new device traffic,
+  * the **cross-query worklist** for the concurrent query plane — in
+    per-query batch mode, :meth:`Scheduler.split_shared_io`
+    deduplicates the Q schedules' preload submissions (one physical
+    read serves every query that wants the block while it is resident;
+    the rest is accounted as *shared* I/O); in aggregated batch mode,
+    :meth:`Scheduler.aggregate_worklist` merges the Q per-query
+    metadata vectors into ONE worklist (sum of active counts, max of
+    per-query-rebased priorities) so preload and pull make a single
+    decision per tick that serves every query,
   * worklist metadata (per-block active counts and priorities), either
     rebuilt from scratch every tick (:meth:`Scheduler.refresh`) or
     maintained *incrementally* from the executor's lane windows
@@ -367,6 +370,20 @@ class Scheduler:
         vertices, and activation implies a key change (both hold for
         every paper algorithm — they are the semantics of Alg. 1).
 
+        **Windowed priority (PR 6):** when the algorithm defines
+        ``priority_at``, the all-V ``algo.priority(state, deg)``
+        re-evaluation is skipped too. ``v_prio`` starts from the carried
+        ``v_prio_old`` and is re-evaluated only inside each pulled
+        lane's vertex window and at its edge window's destinations —
+        the only positions whose state rows the tick may have mutated
+        (same contract as the count/priority windows above). Every
+        position a lane *reads* (its own window max, its own scatter
+        destinations) it has already re-evaluated, and cross-lane
+        duplicate writes carry identical post-tick values, so the
+        threaded ``v_prio`` is exact wherever it is consumed. The
+        full-rebuild ``lax.cond`` recomputes ``v_prio`` over all V in
+        this mode, because wide-tile lanes' windows were never walked.
+
         Returns ``(b_nactive', b_prio', v_prio')`` where ``v_prio'`` is
         the per-vertex priority under the post-tick state (carried so
         the next tick can detect downward moves without re-evaluating
@@ -376,17 +393,30 @@ class Scheduler:
         imin = jnp.iinfo(jnp.int32).min
         t = self.tables
         V = int(self.v_sched.shape[0])
-        v_prio = algo.priority(state, self.v_deg).astype(i32)
+        windowed_prio = algo.priority_at is not None
+        if windowed_prio:
+            v_prio = v_prio_old
+        else:
+            v_prio = algo.priority(state, self.v_deg).astype(i32)
         nact2 = self._block_counts(front_new)
         pulled = jnp.zeros(self.B, bool).at[eidx].max(lane_valid)
 
         def lane_branch(tile):
             def br(op):
-                prio2, e, valid = op
+                prio2, v_prio, e, valid = op
                 first = t.sched_first[e]
                 end = t.sched_first[e + 1]
                 vids = first + jnp.arange(tile.Vm, dtype=i32)
                 vc = jnp.minimum(vids, t.V - 1)
+                if windowed_prio:
+                    # processed sources live in this window: re-evaluate
+                    # their priority here, before the reads below.
+                    # Masked slots route to index V, dropped by scatter
+                    upd = (vids < end) & valid
+                    pv = algo.priority_at(state, vc,
+                                          self.v_deg[vc]).astype(i32)
+                    v_prio = v_prio.at[jnp.where(upd, vc, t.V)].set(
+                        pv, mode="drop")
                 act = (vids < end) & valid & front_new[vc]
                 lm = jnp.max(jnp.where(act, v_prio[vc], NEG_INF))
                 prio2 = prio2.at[e].set(jnp.where(valid, lm, prio2[e]))
@@ -396,6 +426,13 @@ class Scheduler:
                     jnp.clip(slots, 0, t.all_edges.shape[0] - 1)]
                 dvalid = valid & (dst >= 0)
                 dc = jnp.maximum(dst, 0)
+                if windowed_prio:
+                    # scatter destinations: duplicate dc entries write
+                    # identical post-tick values, so order is immaterial
+                    pd = algo.priority_at(state, dc,
+                                          self.v_deg[dc]).astype(i32)
+                    v_prio = v_prio.at[jnp.where(dvalid, dc, t.V)].set(
+                        pd, mode="drop")
                 db = self.v_sched[dc]
                 dmask = dvalid & front_new[dc]
                 # imin fill: a no-op even against an empty block's
@@ -404,7 +441,7 @@ class Scheduler:
                     jnp.where(dmask, v_prio[dc], imin))
                 drop = dmask & ~pulled[db] & (v_prio[dc] < v_prio_old[dc]) \
                     & (v_prio_old[dc] == b_prio[db])
-                return prio2, jnp.any(drop)
+                return prio2, v_prio, jnp.any(drop)
             return br
 
         # a tile whose window rivals V costs more than the vectorized
@@ -429,18 +466,25 @@ class Scheduler:
             use_window = jnp.asarray(np.array(windowed))
             for i in range(eidx.shape[0]):
                 valid = lane_valid[i] & use_window[lane_bucket[i]]
-                op = (prio2, eidx[i], valid)
+                op = (prio2, v_prio, eidx[i], valid)
                 if len(branches) == 1:
-                    prio2, drop = branches[0](op)
+                    prio2, v_prio, drop = branches[0](op)
                 else:
                     k = jnp.where(valid, lane_bucket[i], cheapest)
-                    prio2, drop = jax.lax.switch(k, branches, op)
+                    prio2, v_prio, drop = jax.lax.switch(k, branches, op)
                 any_drop |= drop
 
-        prio2 = jax.lax.cond(
-            any_drop | need_full,
-            lambda p: self._block_prio(front_new, v_prio),
-            lambda p: p, prio2)
+        def _full_rebuild(args):
+            prio2, v_prio = args
+            if windowed_prio:
+                # wide-tile lanes never walked their windows, so the
+                # threaded v_prio may be stale — recompute it whole
+                v_prio = algo.priority(state, self.v_deg).astype(i32)
+            return self._block_prio(front_new, v_prio), v_prio
+
+        prio2, v_prio = jax.lax.cond(
+            any_drop | need_full, _full_rebuild, lambda a: a,
+            (prio2, v_prio))
         return nact2, prio2, v_prio
 
     def initial_block_state(self, nact: jnp.ndarray) -> jnp.ndarray:
@@ -542,6 +586,45 @@ class Scheduler:
                                   axis=1).astype(i32)
         count = lambda m: jnp.sum(m, axis=1).astype(i32)
         return count(phys), spans(phys), count(shared), spans(shared)
+
+    # ---- cross-query worklist: aggregated pull order -----------------
+    @staticmethod
+    def aggregate_worklist(b_nactive, b_prio):
+        """Merge Q per-query worklists into ONE (aggregated batch mode).
+
+        ``b_nactive[q, b]`` / ``b_prio[q, b]`` — query ``q``'s per-block
+        active count / frontier priority max. Returns ``(nact_agg,
+        prio_agg)``, the single worklist the merged tick schedules by:
+
+          * ``nact_agg[b] = sum_q b_nactive[q, b]`` — the cross-query
+            refcount; a block *finishes* only when no query has work in
+            it, which is exactly what finish/activate/pool accounting
+            need on the merged plane;
+          * ``prio_agg[b] = max_q rebased(b_prio[q, b])`` where each
+            query's ACTIVE block priorities are first rebased to >= 1
+            against that query's own active minimum. Per-query rebasing
+            before the cross-query max keeps one query's priority scale
+            (e.g. BFS ``-dis`` in ``[-V, 0]``) from drowning out
+            another's — every query's most-urgent block competes at the
+            same magnitude. Blocks with no active query get ``NEG_INF``
+            so preload/pull skip them.
+
+        Legal only for schedule-independent algorithms (see
+        ``api.aggregation_eligible``): the merged order is *some* valid
+        async order for each query, so every per-query fixed point is
+        unchanged even though the schedule differs from solo.
+        """
+        i32 = jnp.int32
+        imax = jnp.iinfo(jnp.int32).max
+        active = b_nactive > 0                            # [Q, B]
+        nact_agg = jnp.sum(b_nactive, axis=0).astype(i32)
+        has = jnp.any(active, axis=1, keepdims=True)      # [Q, 1]
+        pmin = jnp.min(jnp.where(active, b_prio, imax), axis=1,
+                       keepdims=True)
+        reb = jnp.where(active,
+                        b_prio - jnp.where(has, pmin, 0) + 1, NEG_INF)
+        prio_agg = jnp.max(reb, axis=0).astype(i32)
+        return nact_agg, prio_agg
 
     # ---- stage 7: finish / reactivation / eviction -------------------
     def finish(self, b_state, b_stamp, b_reuse, b_nactive2, eidx,

@@ -20,6 +20,16 @@ physical read serves both, the rest is ``Metrics.io_blocks_shared``)
 while the BFS runs after them. Results are bit-identical to solo
 ``session.run`` calls, per the batch plane's contract.
 
+Under ``EngineConfig(batch_mode="aggregated")`` (PR 6) each
+schedule-independent group (BFS/WCC/KCore) runs on the engine's merged
+plane — ONE pull order and one executor pass per block serving the
+whole group, with ``pool_mode="shared"`` capping the group's pool
+residency at a solo run's — while add-combiner groups (PPR/PageRank)
+transparently stay on the per-query plane; the routing is the
+session's (:meth:`GraphSession._run_batch`), so the service inherits
+it unchanged and ``last_batches[i].batch_mode`` shows which plane each
+group got.
+
 Multi-pass queries that override ``Query.execute`` (``MIS``) cannot
 join a batch — they need host barriers between engine passes — and are
 drained as solo runs, in submission order with everything else.

@@ -32,6 +32,16 @@ runs, with physical I/O deduplicated across the batch
 baseline (back-to-back runs, no cross-query sharing). For mixed
 workloads use :class:`~repro.core.service.GraphService`, which groups
 submissions into batches by compiled-tick key and drains them.
+
+**Aggregated batches (PR 6):** with
+``EngineConfig(batch_mode="aggregated")`` the session routes
+schedule-independent batches (BFS/WCC/KCore) to the engine's merged
+plane — one pull order and one executor pass per block for the whole
+batch, optionally one shared-capacity pool
+(``pool_mode="shared"``) — and transparently falls back to the
+per-query plane for add-combiner algorithms (PPR/PageRank), whose
+results are schedule-dependent. ``BatchResult.batch_mode`` records
+the plane that actually ran.
 """
 from __future__ import annotations
 
@@ -40,8 +50,9 @@ from typing import Any, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.api import AlgoContext, Algorithm, Query, QueryBatch
-from repro.core.engine import Engine, EngineConfig, Metrics
+from repro.core.api import (AlgoContext, Algorithm, Query, QueryBatch,
+                            aggregation_eligible)
+from repro.core.engine import Engine, EngineConfig, Metrics, batch_totals
 from repro.io_sim.ssd_model import SSDModel
 from repro.storage.csr import CSRGraph
 from repro.storage.hybrid import HybridGraph, build_hybrid
@@ -70,22 +81,35 @@ class RunResult:
 class BatchResult:
     """Result of one :class:`~repro.core.api.QueryBatch` co-execution.
 
-    ``results[i]`` is the i-th member query's :class:`RunResult`,
-    bit-identical (result, state, non-I/O counters) to a solo
-    ``session.run`` of that query. ``metrics`` is the batch aggregate
-    (per-query Metrics summed): its ``io_blocks`` counts every
-    physically-read block ONCE across the batch, and
-    ``io_blocks_shared`` the submissions served from another query's
-    resident copy — ``io_blocks + io_blocks_shared`` equals the sum of
-    the members' solo I/O, so the gap IS the cross-query worklist's
-    saving. (Aggregate ``ticks`` sums per-query tick counts; the
-    batch's wall-clock critical path is ``max`` over members.)
+    ``results[i]`` is the i-th member query's :class:`RunResult`. Under
+    ``batch_mode="per_query"`` it is bit-identical (result, state,
+    non-I/O counters) to a solo ``session.run`` of that query; under
+    ``batch_mode="aggregated"`` (PR 6) it is *equivalent* — same fixed
+    point and extract output, but the schedule (and therefore the
+    schedule counters) is the batch's ONE merged pull order, shared by
+    every member. ``metrics`` is the batch aggregate
+    (:func:`~repro.core.engine.batch_totals`): on the per-query plane
+    the per-query Metrics summed — ``io_blocks`` counts every
+    physically-read block ONCE across the batch, ``io_blocks_shared``
+    the submissions served from another query's resident copy, and
+    ``io_blocks + io_blocks_shared`` equals the sum of the members'
+    solo I/O, so the gap IS the cross-query worklist's saving. On the
+    aggregated plane the shared-schedule counters are taken once (not
+    summed Q-fold) and only the per-query work counters are summed.
+    (Aggregate ``ticks`` sums per-query tick counts; the batch's
+    wall-clock critical path is ``max`` over members.)
+
+    ``batch_mode`` records the plane the batch ACTUALLY ran on:
+    ``"per_query"`` may appear under an aggregated config when the
+    algorithm is not schedule-independent (PPR/PageRank) and the
+    session transparently fell back.
     """
 
     query: Query                  # the QueryBatch
     results: list[RunResult]
     metrics: Metrics
     config: EngineConfig          # snapshot, as in RunResult
+    batch_mode: str = "per_query"  # effective execution plane
 
     def __iter__(self):
         return iter(self.results)
@@ -221,9 +245,17 @@ class GraphSession:
         its homogeneity checks."""
         if algos is None:
             algos = batch.build_batch()
+        # effective-plane routing (PR 6): an aggregated config applies
+        # only to schedule-independent algorithms; add-combiner batches
+        # (PPR/PageRank) transparently fall back to the per-query plane
+        # rather than erroring — BatchResult.batch_mode records which
+        # plane actually ran
+        mode = self.engine.cfg.batch_mode
+        if mode == "aggregated" and not aggregation_eligible(algos[0]):
+            mode = "per_query"
         fronts, states = batch.init_batch(algos, self.ctx)
         out_states, metrics, traces = self.engine.run_batch(
-            algos[0], fronts, states)
+            algos[0], fronts, states, batch_mode=mode)
         extracted = batch.extract_batch(algos, out_states, self.ctx)
         results = [
             self._wrap(q, extracted[i],
@@ -231,8 +263,7 @@ class GraphSession:
                        metrics[i],
                        traces[i] if traces is not None else None)
             for i, q in enumerate(batch.queries)]
-        total = metrics[0]
-        for m in metrics[1:]:
-            total = total + m
-        return BatchResult(query=batch, results=results, metrics=total,
-                           config=dataclasses.replace(self.engine.cfg))
+        return BatchResult(query=batch, results=results,
+                           metrics=batch_totals(metrics, mode),
+                           config=dataclasses.replace(self.engine.cfg),
+                           batch_mode=mode)

@@ -1,0 +1,216 @@
+"""Aggregated batch plane acceptance (PR 6).
+
+The aggregated plane trades the per-query plane's bit-parity for
+compute amortization: ONE merged pull order per tick, one executor
+pass per block serving all Q queries, one real ``pool_slots``-capacity
+buffer pool. Its contract is **equivalence, not parity**:
+
+  * every member query's ``result``/``state`` fixed point equals a
+    solo run of the same query (schedule independence of min-combiner
+    relaxations and k-core peeling) — but tick-for-tick counters are
+    those of the merged schedule, not the solo one;
+  * executor block-passes per query drop strictly below the per-query
+    plane's at Q >= 4 (the batch-compute win the bench gates);
+  * peak pool residency stays within the single ``pool_slots`` budget
+    (``pool_mode='shared'``), not Q x ``pool_slots``;
+  * schedule-dependent algorithms (f32 add combiner: PPR) are refused
+    by ``Engine.run_batch`` and transparently routed back to the
+    per-query plane by the session/service layer.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.algorithms import BFS, KCore, PPR, WCC, ppr_batch
+from repro.core import (EngineConfig, GraphService, GraphSession,
+                        QueryBatch, lift_init)
+from repro.core.api import aggregation_eligible
+from repro.storage.csr import symmetrize
+from repro.storage.rmat import rmat_graph
+
+CFG = dict(lanes=4, prefetch=4, queue_depth=8, pool_slots=24,
+           chunk_size=64, bucketing=0)
+AGG = dict(batch_mode="aggregated", pool_mode="shared")
+SOURCES = (0, 3, 7, 21, 50, 101, 202, 303)     # Q = 8 distinct sources
+
+
+@functools.lru_cache(maxsize=None)
+def _graph(symmetric: bool = False):
+    """The skewed R-MAT fixture (same family as test_multi_query)."""
+    g = rmat_graph(scale=9, avg_degree=8, a=0.65, b=0.15, c=0.15, seed=0)
+    return symmetrize(g) if symmetric else g
+
+
+def make_session(g, **kw) -> GraphSession:
+    return GraphSession(g, EngineConfig(**{**CFG, **kw}), block_edges=64)
+
+
+BATCHES = {
+    "bfs": (False, lambda: tuple(BFS(s) for s in SOURCES)),
+    "wcc": (True, lambda: (WCC(),) * len(SOURCES)),
+    "kcore": (True, lambda: (KCore(3),) * len(SOURCES)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _family(name):
+    """One shared (aggregated batch, per-query batch, solo runs) per
+    algorithm family — several tests read these, so they run once."""
+    symmetric, mk = BATCHES[name]
+    queries = mk()
+    g = _graph(symmetric)
+    agg = make_session(g, **AGG).run(QueryBatch(queries))
+    per_sess = make_session(g)
+    per = per_sess.run(QueryBatch(queries))
+    solos = [per_sess.run(q) for q in queries]
+    return queries, agg, per, solos
+
+
+# ----------------------------------------------------------------------
+# equivalence: same fixed point and extract as solo, per member query
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(BATCHES))
+def test_aggregated_reaches_solo_fixed_point(name):
+    queries, agg, _, solos = _family(name)
+    assert agg.batch_mode == "aggregated"
+    for r, s in zip(agg.results, solos):
+        assert np.array_equal(r.result, s.result)
+        assert set(r.state) == set(s.state)
+        for k in s.state:
+            assert r.state[k].dtype == s.state[k].dtype
+            assert np.array_equal(r.state[k], s.state[k]), k
+
+
+def test_aggregated_bucketed_tiles_bfs():
+    """The merged schedule rides the default degree-bucketed tiling
+    (per-lane lax.switch routing) too, not just uniform tiles."""
+    queries = tuple(BFS(s) for s in SOURCES[:4])
+    g = _graph(False)
+    agg = make_session(g, bucketing=6, **AGG).run(QueryBatch(queries))
+    solo = make_session(g, bucketing=6)
+    for r, q in zip(agg.results, queries):
+        assert np.array_equal(r.result, solo.run(q).result)
+
+
+def test_aggregated_pallas_matches_gather():
+    g = _graph(False)
+    queries = tuple(BFS(s) for s in SOURCES[:4])
+    rg = make_session(g, **AGG).run(QueryBatch(queries))
+    rp = make_session(g, executor="pallas", **AGG).run(QueryBatch(queries))
+    for a, b in zip(rg.results, rp.results):
+        assert np.array_equal(a.result, b.result)
+    # both backends ran the SAME merged schedule
+    assert rg.metrics.block_passes == rp.metrics.block_passes
+    assert rg.metrics.io_blocks == rp.metrics.io_blocks
+
+
+# ----------------------------------------------------------------------
+# the batch-compute win: block-passes per query + pool residency
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(BATCHES))
+def test_aggregated_cuts_block_passes_per_query(name):
+    queries, agg, per, solos = _family(name)
+    Q = len(queries)
+    # per-query plane: each member advances its own solo schedule, so
+    # its block_passes equal the solo run's (bit-parity), and the batch
+    # pays the sum
+    for r, s in zip(per.results, solos):
+        assert r.metrics.block_passes == s.metrics.block_passes
+    perq = sum(r.metrics.block_passes for r in per.results) / Q
+    # aggregated plane: ONE shared schedule, replicated into every
+    # member's Metrics — the whole batch pays it once
+    agg_passes = agg.results[0].metrics.block_passes
+    assert all(r.metrics.block_passes == agg_passes for r in agg.results)
+    assert agg_passes / Q < perq, \
+        "aggregation must strictly reduce executor block-passes/query"
+    # batch totals count the shared schedule once, per-query work summed
+    assert agg.metrics.block_passes == agg_passes
+    assert agg.metrics.edges_scanned == \
+        sum(r.metrics.edges_scanned for r in agg.results)
+
+
+@pytest.mark.parametrize("name", list(BATCHES))
+def test_shared_pool_peak_within_single_budget(name):
+    _, agg, per, _ = _family(name)
+    # pool_mode='shared': the whole batch lives in ONE pool_slots pool
+    assert 0 < agg.results[0].metrics.peak_used_slots <= CFG["pool_slots"]
+    # per-query plane: every member gets its own pool_slots budget, so
+    # batch residency is bounded by Q x pool_slots, not pool_slots (a
+    # degenerate member — e.g. BFS from an isolated vertex — may
+    # legitimately never pull a block, hence no lower bound here)
+    for r in per.results:
+        assert r.metrics.peak_used_slots <= CFG["pool_slots"]
+
+
+# ----------------------------------------------------------------------
+# eligibility: add-combiner batches refuse / transparently fall back
+# ----------------------------------------------------------------------
+
+def test_aggregation_eligibility():
+    assert aggregation_eligible(BFS(0).build())          # min combiner
+    assert aggregation_eligible(WCC().build())           # min combiner
+    assert aggregation_eligible(KCore(3).build())        # explicit opt-in
+    assert not aggregation_eligible(PPR(0).build())      # f32 add
+
+
+def test_engine_refuses_schedule_dependent_aggregation():
+    sess = make_session(_graph(False))
+    batch = ppr_batch(SOURCES[:4], r_max=1e-4)
+    algos = batch.build_batch()
+    fronts, states = lift_init(algos, sess.ctx)
+    with pytest.raises(ValueError, match="not schedule-independent"):
+        sess.engine.run_batch(algos[0], fronts, states,
+                              batch_mode="aggregated")
+
+
+def test_session_falls_back_for_add_combiner_batches():
+    """An aggregated-mode session routes a PPR batch back to the
+    per-query plane transparently — and records the plane it ran on."""
+    g = _graph(False)
+    sess = make_session(g, **AGG)
+    res = sess.run(ppr_batch(SOURCES[:4], r_max=1e-4))
+    assert res.batch_mode == "per_query"
+    solo = make_session(g)
+    for r, q in zip(res.results, res.query.queries):
+        assert np.array_equal(r.result, solo.run(q).result)
+
+
+def test_service_routes_batches_by_eligibility():
+    """One aggregated-mode service, mixed submissions: the BFS group
+    aggregates, the PPR group falls back — per batch, not per drain."""
+    g = _graph(False)
+    svc = GraphService(g, EngineConfig(**{**CFG, **AGG}), block_edges=64)
+    queries = [BFS(0), PPR(1, r_max=1e-4), BFS(3), PPR(5, r_max=1e-4)]
+    handles = [svc.submit(q) for q in queries]
+    svc.drain()
+    modes = {type(b.query.queries[0]).__name__: b.batch_mode
+             for b in svc.last_batches}
+    assert modes == {"BFS": "aggregated", "PPR": "per_query"}
+    ref = make_session(g)
+    for h in handles:
+        assert np.array_equal(h.result().result,
+                              ref.run(h.query).result), h.query
+
+
+# ----------------------------------------------------------------------
+# config validation
+# ----------------------------------------------------------------------
+
+def test_config_validation():
+    g = _graph(False)
+    with pytest.raises(ValueError, match="unknown batch_mode"):
+        make_session(g, batch_mode="bogus")
+    with pytest.raises(ValueError, match="unknown pool_mode"):
+        make_session(g, pool_mode="bogus")
+    with pytest.raises(ValueError, match="batch_mode='aggregated'"):
+        make_session(g, pool_mode="shared")    # without aggregated
+    with pytest.raises(ValueError, match="per-query plane"):
+        make_session(g, sync=True, **AGG)
+    sess = make_session(g)
+    fronts, states = lift_init((BFS(0).build(),), sess.ctx)
+    with pytest.raises(ValueError, match="unknown batch_mode"):
+        sess.engine.run_batch(BFS(0).build(), fronts, states,
+                              batch_mode="bogus")

@@ -36,3 +36,13 @@ def test_bench_smoke_writes_trajectory_point():
     assert mq["failures"] == 0
     assert {r["name"] for r in mq["results"]} == \
         {n for n in names if n.startswith("multiq_")}
+    # aggregated-plane smoke (PR 6): the BFS/WCC aggregated rows ran,
+    # reached the per-query plane's results, and passed the in-bench
+    # gates (strict block-pass reduction at Q>=4, peak <= pool_slots)
+    agg = [r for r in mq["results"] if "_agg_" in r["name"]]
+    assert len(agg) >= 2 and all("results_ok" in r["derived"]
+                                 for r in agg)
+    # derived-only rows omit us_per_call rather than writing 0.0 —
+    # every timed multi-query row here carries a real measurement
+    assert all(r["us_per_call"] > 0 for r in mq["results"]
+               if "us_per_call" in r)

@@ -7,9 +7,10 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.algorithms import BFS, WCC
+from repro.algorithms import BFS, KCore, WCC
 from repro.algorithms.bfs import bfs_algorithm
 from repro.algorithms.wcc import wcc_algorithm
+from repro.core.api import QueryBatch
 from repro.core.engine import Engine, EngineConfig
 from repro.core.session import GraphSession
 from repro.storage.csr import from_edges, symmetrize
@@ -135,6 +136,38 @@ def test_engine_deterministic(seed):
         runs.append((res.result.tolist(), res.metrics.io_blocks,
                      res.metrics.ticks, res.metrics.edges_scanned))
     assert runs[0] == runs[1]
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(random_graph(), st.sampled_from(["bfs", "wcc", "kcore"]),
+       st.integers(min_value=2, max_value=5), st.sampled_from([4, 8, 16]))
+def test_aggregated_pull_order_reaches_solo_fixed_point(g, algo, q, pool):
+    """Schedule independence (the aggregated plane's soundness
+    condition): the merged pull order is an arbitrary interleaving of
+    the member queries' solo orders, further permuted here by random
+    pool capacity — min-combiner relaxations (BFS, WCC) and k-core
+    peeling must still reach the per-query solo fixed point."""
+    if algo != "bfs":
+        g = symmetrize(g)
+    queries = {"bfs": tuple(BFS(s) for s in range(q)),
+               "wcc": (WCC(),) * q,
+               "kcore": (KCore(3),) * q}[algo]
+    cfg = dict(lanes=2, prefetch=3, queue_depth=4, pool_slots=pool,
+               chunk_size=16)
+    agg = GraphSession(g, EngineConfig(batch_mode="aggregated",
+                                       pool_mode="shared", **cfg),
+                       block_edges=32)
+    solo = GraphSession(g, EngineConfig(**cfg), block_edges=32)
+    res = agg.run(QueryBatch(queries))
+    assert res.batch_mode == "aggregated"
+    for r, query in zip(res.results, queries):
+        s = solo.run(query)
+        assert np.array_equal(r.result, s.result)
+        for k in s.state:
+            assert np.array_equal(r.state[k], s.state[k]), k
+    # the shared pool serves the whole batch within ONE pool budget
+    assert res.results[0].metrics.peak_used_slots <= agg.engine.pool.slots
 
 
 @pytest.mark.slow
