@@ -1,0 +1,179 @@
+"""Continuous-service SLOs: latency percentiles and qps under Poisson
+arrivals with mid-flight admission.
+
+The serving tentpole's acceptance bench. A seeded Poisson arrival
+process drives :class:`~repro.core.serving.ContinuousService` — queries
+join RUNNING batches at tick boundaries, retire the moment their row
+converges, and the host loop never drains in between. Three scenarios:
+
+  * ``service_bfs_poisson``     — homogeneous BFS traffic, per-query
+    plane: every admitted query must be **bit-identical** to its solo
+    run, with per-query I/O conservation (physical + shared == solo
+    logical) — the mid-flight-admission identity contract;
+  * ``service_bfs_agg_poisson`` — the same arrivals on the aggregated
+    plane with ``agg_fairness='progress'``: fixed-point identity under
+    the merged schedule;
+  * ``service_hetero_poisson``  — mixed BFS + PPR traffic: two
+    compiled-tick groups co-executing from one host loop.
+
+Each row reports modeled latency p50/p99 (service ticks and SSD-model
+seconds), modeled qps, the mid-flight admission count, and the
+idle-barrier count. CI gates (AssertionError → run.py counts a build
+failure, mirroring BENCH_multi_query.json's conservation gate):
+
+  * result identity + per-query I/O conservation on the per-query plane,
+  * fixed-point identity on the aggregated plane,
+  * ``idle_barrier_ticks == 0`` — the loop never idles with work pending,
+  * ``midflight_admissions >= 1`` per scenario — the arrivals actually
+    exercised admission into running batches,
+  * latency monotonicity per query: end-to-end (submit->retire) >=
+    execution (admit->retire) >= the solo tick count (per-query plane
+    rows advance the solo schedule, so modeled latency can only add
+    queue wait, never undercut solo).
+
+``REPRO_BENCH_SMOKE=1`` shrinks the arrival count for the tier-1 smoke
+path; arrivals are seeded (``default_rng(7)``) so the trajectory is
+reproducible run-to-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, make_session, timed
+from repro.algorithms import BFS, PPR
+from repro.core import ContinuousService, ServeConfig
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+N_ARRIVALS = 6 if SMOKE else 16
+MEAN_GAP = 3 if SMOKE else 4        # service ticks between arrivals
+SERVE = dict(initial_capacity=2, max_capacity=8)
+
+
+def poisson_arrivals(n: int, mean_gap: float, seed: int) -> np.ndarray:
+    """Seeded arrival ticks: exponential inter-arrival gaps, floored to
+    the tick grid (admission happens at tick boundaries)."""
+    rng = np.random.default_rng(seed)
+    return np.floor(rng.exponential(scale=mean_gap, size=n).cumsum()
+                    ).astype(np.int64)
+
+
+def drive(svc: ContinuousService, arrivals) -> list:
+    """Feed (tick, query) arrivals into the stepping loop; returns the
+    handles. The loop also steps through idle gaps between bursts —
+    only *pending-work* idleness would count as a barrier violation."""
+    handles, i = [], 0
+    while i < len(arrivals) or svc.pending:
+        while i < len(arrivals) and arrivals[i][0] <= svc.clock:
+            handles.append(svc.submit(arrivals[i][1]))
+            i += 1
+        svc.step()
+    return handles
+
+
+def check_identity(handles, solo, conservation: bool, label: str):
+    for h in handles:
+        s = solo[h.query]
+        if not np.array_equal(h.result().result, s.result):
+            raise AssertionError(
+                f"{label}: admitted query {h.query} diverged from solo")
+        m = h.result().metrics
+        if conservation:
+            if (m.io_ops + m.io_ops_shared != s.metrics.io_ops
+                    or m.io_blocks + m.io_blocks_shared
+                    != s.metrics.io_blocks):
+                raise AssertionError(
+                    f"{label}: I/O conservation violated for {h.query}: "
+                    f"{m.io_blocks}+{m.io_blocks_shared} vs "
+                    f"{s.metrics.io_blocks}")
+            # latency monotonicity: queue wait + execution, and the row
+            # ran the solo schedule, so neither leg can undercut solo
+            execution = h.retire_tick - h.admit_tick
+            if not (h.latency_ticks >= execution >= s.metrics.ticks):
+                raise AssertionError(
+                    f"{label}: latency monotonicity violated for "
+                    f"{h.query}: submit->retire {h.latency_ticks} < "
+                    f"admit->retire {execution} < solo {s.metrics.ticks}")
+
+
+def gate_stats(st: dict, label: str) -> None:
+    if st["idle_barrier_ticks"] != 0:
+        raise AssertionError(
+            f"{label}: service idled {st['idle_barrier_ticks']} ticks "
+            "with work pending — the loop must never drain-barrier")
+    if st["midflight_admissions"] < 1:
+        raise AssertionError(
+            f"{label}: no mid-flight admissions — arrivals never joined "
+            "a running batch, the scenario is not exercising admission")
+
+
+def fmt(st: dict) -> str:
+    return (f"p50_{st['latency_ticks_p50']:.0f}t"
+            f"_p99_{st['latency_ticks_p99']:.0f}t"
+            f"_p99s_{st['latency_seconds_p99']:.2e}"
+            f"_qps_{st['qps']:.0f}"
+            f"_midflight_{st['midflight_admissions']}"
+            f"_idle_barriers_{st['idle_barrier_ticks']}"
+            f"_peak_cap_{st['peak_capacity']}")
+
+
+def main() -> None:
+    g = bench_graph(scale=10)
+    sess = make_session(g, pool_slots=48)
+    rng = np.random.default_rng(7)
+    V = sess.ctx.V
+    sources = rng.integers(0, min(V, 1 << 14), size=N_ARRIVALS)
+    solo = {}
+
+    # ---- homogeneous BFS, per-query plane: bit-identity --------------
+    queries = [BFS(int(s)) for s in sources]
+    for q in queries:
+        if q not in solo:
+            solo[q] = sess.run(q)
+    ticks = poisson_arrivals(N_ARRIVALS, MEAN_GAP, seed=7)
+    # same session/engine as the solo baselines: the service adds its
+    # own compiled serving fns, the solo ticks stay warm
+    svc = ContinuousService(sess, serve=ServeConfig(**SERVE))
+    handles, secs = timed(drive, svc, list(zip(ticks, queries)))
+    check_identity(handles, solo, conservation=True,
+                   label="service_bfs_poisson")
+    st = svc.stats()
+    gate_stats(st, "service_bfs_poisson")
+    emit(f"service_bfs_poisson_n{N_ARRIVALS}", secs, fmt(st))
+
+    # ---- the same arrivals, aggregated plane + progress fairness -----
+    agg_sess = sess.fork(dataclasses.replace(
+        sess.cfg, batch_mode="aggregated", pool_mode="shared",
+        agg_fairness="progress"))
+    svc = ContinuousService(agg_sess, serve=ServeConfig(**SERVE))
+    handles, secs = timed(drive, svc, list(zip(ticks, queries)))
+    check_identity(handles, solo, conservation=False,
+                   label="service_bfs_agg_poisson")
+    st = svc.stats()
+    gate_stats(st, "service_bfs_agg_poisson")
+    emit(f"service_bfs_agg_poisson_n{N_ARRIVALS}", secs, fmt(st))
+
+    # ---- heterogeneous traffic: BFS + PPR groups co-execute ----------
+    mixed = [BFS(int(s)) if i % 2 else PPR(int(s), r_max=1e-4)
+             for i, s in enumerate(sources)]
+    for q in mixed:
+        if q not in solo:
+            solo[q] = sess.run(q)
+    svc = ContinuousService(sess, serve=ServeConfig(**SERVE))
+    handles, secs = timed(drive, svc, list(zip(ticks, mixed)))
+    check_identity(handles, solo, conservation=False,
+                   label="service_hetero_poisson")
+    st = svc.stats()
+    gate_stats(st, "service_hetero_poisson")
+    if st["groups"] != 2:
+        raise AssertionError(
+            f"heterogeneous scenario formed {st['groups']} groups, "
+            "expected 2 (BFS + PPR)")
+    emit(f"service_hetero_poisson_n{N_ARRIVALS}", secs,
+         fmt(st) + f"_groups_{st['groups']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     ("fig17_skew", "benchmarks.bench_skew"),
     ("tick_cost_bucketing", "benchmarks.bench_tick_cost"),
     ("multi_query", "benchmarks.bench_multi_query"),
+    ("service", "benchmarks.bench_service"),
 ]
 
 

@@ -2,7 +2,7 @@ from repro.core.block_state import (BlockState, Event, transition,
                                     TRANSITIONS)
 from repro.core.afs import AdaptiveFrontierSet
 from repro.core.api import (AlgoContext, Algorithm, Query, QueryBatch,
-                            lift_extract, lift_init)
+                            QueryState, lift_extract, lift_init)
 from repro.core.engine import (Engine, EngineConfig, Metrics,
                                foreach_vertex_frontier)
 from repro.core.executor import (EXECUTORS, ExecResult, ExecTables,
@@ -14,16 +14,18 @@ from repro.core.scheduler import (CACHED_POLICIES, FifoPolicy,
                                   LruPolicy, PriorityPolicy, PullPolicy,
                                   PullView, Scheduler, make_pull_policy)
 from repro.core.service import GraphService, QueryHandle
+from repro.core.serving import ContinuousService, ServeConfig
 from repro.core.session import BatchResult, GraphSession, RunResult
 
 __all__ = [
     "BlockState", "Event", "transition", "TRANSITIONS",
     "AdaptiveFrontierSet", "Engine", "EngineConfig", "Metrics",
     "foreach_vertex_frontier",
-    "AlgoContext", "Algorithm", "Query", "QueryBatch",
+    "AlgoContext", "Algorithm", "Query", "QueryBatch", "QueryState",
     "lift_init", "lift_extract",
     "GraphSession", "RunResult", "BatchResult",
     "GraphService", "QueryHandle",
+    "ContinuousService", "ServeConfig",
     "EXECUTORS", "ExecResult", "ExecTables", "ExecutorBackend",
     "GatherExecutor", "PallasExecutor", "Tile", "make_executor",
     "BufferPool",

@@ -82,6 +82,26 @@ class AlgoContext:
         return vid
 
 
+class QueryState:
+    """Lifecycle of a submitted query handle.
+
+    ``PENDING`` — submitted, waiting for capacity (queued);
+    ``RUNNING`` — admitted into a live batch row (continuous service;
+    the drain-style :class:`~repro.core.service.GraphService` jumps
+    straight from PENDING to a terminal state);
+    ``DONE`` — retired with a result;
+    ``FAILED`` — rejected or errored (the handle carries the error).
+
+    Plain string constants, not an enum: handle states print/compare
+    as their names and serialize into benchmark JSON unchanged.
+    """
+
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
 class Query:
     """A first-class, reusable description of one graph computation.
 

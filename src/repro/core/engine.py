@@ -108,6 +108,7 @@ from repro.core.executor import ExecTables, Tile, make_executor
 from repro.core.pool import BufferPool
 from repro.core.scheduler import (S_CACHED, S_LOADING, PullView,
                                   Scheduler, make_pull_policy)
+from repro.io_sim.compute import ComputeModel
 from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.storage.hybrid import HybridGraph, mini_offset
 
@@ -116,7 +117,7 @@ TRACE_LEN = 16384
 _COUNTERS = ("io_ops", "io_blocks", "edges_scanned", "vertices_processed",
              "reuse_activations", "blocks_reused", "exec_idle_ticks",
              "io_active_ticks", "inflight_ticks", "barriers", "ticks",
-             "block_passes", "peak_used_slots")
+             "block_passes", "peak_used_slots", "exec_busy_ticks")
 
 #: batch-only counters: preload submissions served by another query's
 #: resident / in-flight copy instead of new device traffic
@@ -194,6 +195,19 @@ class EngineConfig:
     #                             cross-query admission (batch peak
     #                             residency == a solo run's); requires
     #                             batch_mode='aggregated'
+    compute: ComputeModel | None = None  # edge-mass-proportional
+    #                             executor occupancy: pulls charge
+    #                             ceil(edge_mass / edges_per_tick)
+    #                             busy ticks that gate further pulls
+    #                             (I/O keeps flowing underneath). None
+    #                             = the legacy 1-tick-per-pull
+    #                             schedule, bit-for-bit
+    agg_fairness: str = "none"  # aggregated-plane merge fairness:
+    #                             'none' (PR 6 compat: magnitude-
+    #                             rebased max) | 'progress' (near-done
+    #                             queries outrank big-frontier ones —
+    #                             the mid-flight admission guard; see
+    #                             Scheduler.aggregate_worklist)
     max_ticks: int = 200_000
     trace: bool = False         # record per-tick pipeline occupancy
 
@@ -225,6 +239,11 @@ class Metrics:
     # the pre-batch counters.
     io_ops_shared: int = 0
     io_blocks_shared: int = 0
+    # ---- compute cost model (EngineConfig.compute) --------------------
+    # Ticks the executor spent occupied (pulling or chewing carried
+    # multi-tick work). 0 unless a ComputeModel is configured; the
+    # SSDModel converts it into measured compute seconds.
+    exec_busy_ticks: int = 0
     # ---- schedule-cost / residency accounting (PR 6) ------------------
     # block_passes counts executor lane slots actually executed (one per
     # pulled block per tick). On the per-query plane each query pays its
@@ -314,6 +333,10 @@ class Engine:
                 "special case (sync=True) pins each query to "
                 "per-iteration barriers and is only supported on the "
                 "per-query plane")
+        if cfg.agg_fairness not in ("none", "progress"):
+            raise ValueError(
+                f"unknown agg_fairness {cfg.agg_fairness!r}; "
+                "available: ['none', 'progress']")
         self.hg = hg
         self.cfg = cfg
         self._build_tables()
@@ -442,6 +465,9 @@ class Engine:
         self.t_sched_io = as_i32(sched_io)
         self.t_b_bucket = as_i32(b_bucket)
         self.t_b_fill = as_i32(b_fill)
+        # per-block edge mass for the compute cost model (ComputeModel
+        # charges executor ticks proportional to it)
+        self.t_b_edges = as_i32(np.minimum(tot_e, 2 ** 31 - 1))
 
     # ------------------------------------------------------------------
     def run(self, algo: Algorithm, init_frontier: np.ndarray,
@@ -496,15 +522,21 @@ class Engine:
         if cfg.refresh == "incremental":
             carry0["v_prio"] = algo.priority(
                 state0, self.t_v_deg).astype(i32)
+        if cfg.compute is not None:
+            carry0["exec_busy"] = jnp.zeros((), i32)
         return carry0
 
     @staticmethod
     def _work_pending(c):
         """Per-query liveness; reduces the trailing axis, so it applies
         unchanged to a solo carry and to each row of a Q-stacked one."""
-        return (jnp.any(c["front"], axis=-1)
-                | jnp.any(c["front_next"], axis=-1)
-                | jnp.any(c["b_state"] == S_LOADING, axis=-1))
+        pending = (jnp.any(c["front"], axis=-1)
+                   | jnp.any(c["front_next"], axis=-1)
+                   | jnp.any(c["b_state"] == S_LOADING, axis=-1))
+        if "exec_busy" in c:
+            # compute model: the run ends when the executor drains too
+            pending |= c["exec_busy"] > 0
+        return pending
 
     def _run_impl(self, algo: Algorithm, front0, state0):
         cfg = self.cfg
@@ -545,12 +577,14 @@ class Engine:
 
         incremental = cfg.refresh == "incremental"
         check = cfg.check_refresh and incremental
+        compute = cfg.compute
 
         def tick(c):
             state, front = c["state"], c["front"]
             b_prio, b_nactive = c["b_prio"], c["b_nactive"]
             t = c["t"]
             cnt = dict(c["counters"])
+            busy0 = c["exec_busy"] if compute is not None else None
 
             # ---- 1. async I/O completions (against device deadlines) ---
             comp = sched.complete_io(c["b_state"], c["b_deadline"],
@@ -566,14 +600,30 @@ class Engine:
             # (the batch plane first dedups them across queries)
 
             # ---- 3. pull: cached-queue policy --------------------------
+            # compute model: while the executor is busy chewing a prior
+            # pull's edge mass, no new pull happens (worklist zeroed ->
+            # nothing ready) but stages 1/2 above keep I/O flowing —
+            # the paper's compute/I/O overlap, now with real compute
+            # occupancy
+            pull_nact = b_nactive if compute is None else \
+                jnp.where(busy0 == 0, b_nactive, 0)
             eidx, lane_valid, b_used = sched.pull(
-                b_state, b_nactive,
+                b_state, pull_nact,
                 PullView(b_stamp=b_stamp, b_prio=b_prio,
                          b_used=c["b_used"], t=t))
 
             # ---- 4. process: batched apply / propagation ---------------
             res = executor.execute(algo, state, front, eidx, lane_valid)
             state = res.state
+            if compute is not None:
+                # lanes run in parallel; the heaviest pulled block gates
+                # the batch. cost-1: this tick itself is the first busy
+                # tick of the new pull
+                lane_cost = compute.cost_ticks(self.t_b_edges[eidx])
+                cost = jnp.max(jnp.where(lane_valid, lane_cost, 0))
+                busy1 = jnp.where(jnp.any(lane_valid),
+                                  jnp.maximum(cost - 1, 0),
+                                  jnp.maximum(busy0 - 1, 0))
 
             # ---- 5. submit: frontier update + reuse accounting ---------
             front1 = front & ~res.processed
@@ -640,9 +690,17 @@ class Engine:
                                             res.edges_scanned)
             cnt["vertices_processed"] = _c64_add(cnt["vertices_processed"],
                                                  res.vertices_processed)
-            cnt["exec_idle_ticks"] = _c64_add(
-                cnt["exec_idle_ticks"],
-                ((lanes_used == 0) & jnp.any(front2)).astype(i32))
+            idle = (lanes_used == 0) & jnp.any(front2)
+            if compute is not None:
+                # a busy executor is the opposite of an idle one: only
+                # ticks where it *could* have pulled and found nothing
+                # cached count as stalls
+                idle &= busy0 == 0
+                cnt["exec_busy_ticks"] = _c64_add(
+                    cnt["exec_busy_ticks"],
+                    ((busy0 > 0) | jnp.any(lane_valid)).astype(i32))
+            cnt["exec_idle_ticks"] = _c64_add(cnt["exec_idle_ticks"],
+                                              idle.astype(i32))
             # io_active samples in-flight BEFORE completions so a tick
             # whose last read retires still counts; the occupancy
             # *integral* uses the post-completion count + submissions,
@@ -690,6 +748,8 @@ class Engine:
                          counters=cnt, trace=trace)
             if incremental:
                 out_c["v_prio"] = v_prio2
+            if compute is not None:
+                out_c["exec_busy"] = busy1
             io_aux = dict(io_ops=pre.io_ops, io_blocks=pre.io_blocks,
                           sub_mask=pre.sub_mask, sub_spans=pre.sub_spans)
             return out_c, io_aux
@@ -796,15 +856,12 @@ class Engine:
             return out_state, metrics, traces
         return out_state, metrics, None
 
-    def _run_batch_impl(self, algo: Algorithm, fronts0, states0):
-        cfg = self.cfg
-        B = self.B
-        i32 = jnp.int32
+    def _batch_carry0(self, algo: Algorithm, fronts0, states0):
+        """Q-stacked per-query carries at tick 0 (shared by the batch
+        loop and the serving plane). The map body is the solo
+        :meth:`_initial_carry` verbatim; the shared-I/O counters are
+        added on top."""
         Q = fronts0.shape[0]
-        tick = self._tick_fn(algo)
-
-        # per-query carries, stacked on a leading Q axis; the map body
-        # is the solo _initial_carry verbatim
         carry0 = jax.lax.map(
             lambda fs: self._initial_carry(algo, fs[0], fs[1]),
             (fronts0, states0))
@@ -812,16 +869,25 @@ class Engine:
         cnt0 = dict(carry0["counters"])
         for k in _SHARED_COUNTERS:
             cnt0[k] = (zq, zq)
-        carry0 = dict(carry0, counters=cnt0)
+        return dict(carry0, counters=cnt0)
 
-        def alive_mask(c):
-            return (c["t"] < cfg.max_ticks) & self._work_pending(c)
+    def _batch_alive(self, c):
+        """Per-row liveness of a Q-stacked carry — identical to the
+        solo loop's continue condition, so a row's last tick is the
+        same tick solo would have stopped after."""
+        return (c["t"] < self.cfg.max_ticks) & self._work_pending(c)
 
-        def cond(c):
-            return jnp.any(alive_mask(c))
+    def _batch_step_fn(self, algo: Algorithm):
+        """One per-query-plane batch tick: alive-masked solo ticks over
+        the Q axis + the cross-query physical/shared I/O split. Shared
+        by :meth:`_run_batch_impl`'s while_loop and the serving plane's
+        single-tick step."""
+        B = self.B
+        i32 = jnp.int32
+        tick = self._tick_fn(algo)
 
         def step(c):
-            alive = alive_mask(c)
+            alive = self._batch_alive(c)
             # residency at the START of the tick (post-finish of the
             # previous tick): LOADING and CACHED copies can both serve
             # another query's request without new device traffic
@@ -850,36 +916,36 @@ class Engine:
                                                blk_s)
             return dict(c2, counters=cnt)
 
+        return step
+
+    def _run_batch_impl(self, algo: Algorithm, fronts0, states0):
+        carry0 = self._batch_carry0(algo, fronts0, states0)
+        step = self._batch_step_fn(algo)
+
+        def cond(c):
+            return jnp.any(self._batch_alive(c))
+
         out = jax.lax.while_loop(cond, step, carry0)
         return out["state"], out["counters"], out["trace"]
 
     # ------------------------------------------------------------------
     # aggregated batch plane (PR 6): one merged schedule for Q queries
     # ------------------------------------------------------------------
-    def _run_batch_agg_impl(self, algo: Algorithm, fronts0, states0):
-        """One merged pull order serving Q stacked queries (PR 6).
+    def _agg_pool(self, Q: int) -> BufferPool:
+        """The aggregated plane's ONE real pool for a Q-batch."""
+        return self.pool.fork(
+            self.pool_slots if self.cfg.pool_mode == "shared"
+            else Q * self.pool_slots)
 
-        ONE shared control plane (block states, deadlines, pool
-        accounting, pull history) drives the tick; only the worklist
-        metadata, frontier, and algorithm state stay per-query. Each
-        tick merges the Q metadata vectors
-        (:meth:`Scheduler.aggregate_worklist`), preloads/pulls against
-        the merged worklist once, expands each pulled block ONCE over
-        the Q-stacked state (:meth:`ExecutorBackend.execute_many`),
-        then refreshes each query's metadata from the same lane
-        windows (``lax.map``, so the incremental full-rebuild
-        ``lax.cond`` stays a real branch per query). Finish/activate
-        run on the cross-query active refcount ``sum_q nact`` — a
-        block leaves the pool only when NO query has work in it.
-        """
+    def _agg_carry0(self, algo: Algorithm, fronts0, states0):
+        """Aggregated-plane carry at tick 0: ONE shared control plane
+        (block states/deadlines/pool/pull history, scalar clock), Q-
+        stacked worklist metadata / frontier / state / counters."""
         cfg = self.cfg
         B = self.B
         i32 = jnp.int32
         Q = fronts0.shape[0]
-        sched, executor = self.scheduler, self.executor
-        pool = self.pool.fork(
-            self.pool_slots if cfg.pool_mode == "shared"
-            else Q * self.pool_slots)
+        sched = self.scheduler
         incremental = cfg.refresh == "incremental"
         check = cfg.check_refresh and incremental
 
@@ -905,18 +971,69 @@ class Engine:
             carry0["v_prio"] = jax.lax.map(
                 lambda st: algo.priority(st, self.t_v_deg).astype(i32),
                 states0)
+        if cfg.compute is not None:
+            # ONE executor serves the merged schedule -> shared busy
+            carry0["exec_busy"] = jnp.zeros((), i32)
+        return carry0
+
+    def _agg_pending(self, c):
+        """Aggregated-plane liveness (ignoring max_ticks): any frontier
+        work, in-flight I/O, or carried executor occupancy."""
+        work = jnp.any(c["front"]) | jnp.any(c["b_state"] == S_LOADING)
+        if "exec_busy" in c:
+            work |= c["exec_busy"] > 0
+        return work
+
+    def _run_batch_agg_impl(self, algo: Algorithm, fronts0, states0):
+        """One merged pull order serving Q stacked queries (PR 6).
+
+        ONE shared control plane (block states, deadlines, pool
+        accounting, pull history) drives the tick; only the worklist
+        metadata, frontier, and algorithm state stay per-query. Each
+        tick merges the Q metadata vectors
+        (:meth:`Scheduler.aggregate_worklist`), preloads/pulls against
+        the merged worklist once, expands each pulled block ONCE over
+        the Q-stacked state (:meth:`ExecutorBackend.execute_many`),
+        then refreshes each query's metadata from the same lane
+        windows (``lax.map``, so the incremental full-rebuild
+        ``lax.cond`` stays a real branch per query). Finish/activate
+        run on the cross-query active refcount ``sum_q nact`` — a
+        block leaves the pool only when NO query has work in it.
+        """
+        cfg = self.cfg
+        Q = fronts0.shape[0]
+        carry0 = self._agg_carry0(algo, fronts0, states0)
+        tick = self._agg_tick_fn(algo, self._agg_pool(Q))
 
         def cond(c):
-            work = jnp.any(c["front"]) \
-                | jnp.any(c["b_state"] == S_LOADING)
-            return (c["t"] < cfg.max_ticks) & work
+            return (c["t"] < cfg.max_ticks) & self._agg_pending(c)
+
+        out = jax.lax.while_loop(cond, tick, carry0)
+        trace = out["trace"]
+        if cfg.trace:
+            # one shared schedule -> one trace, replicated per query so
+            # run_batch's per-query decode applies unchanged
+            trace = {k: jnp.broadcast_to(v[None, :], (Q, TRACE_LEN))
+                     for k, v in trace.items()}
+        return out["state"], out["counters"], trace
+
+    def _agg_tick_fn(self, algo: Algorithm, pool: BufferPool):
+        """Build the aggregated-plane tick (shared by the batch
+        while_loop and the serving plane's single-tick step)."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        sched, executor = self.scheduler, self.executor
+        incremental = cfg.refresh == "incremental"
+        check = cfg.check_refresh and incremental
+        compute = cfg.compute
 
         def tick(c):
             state, front = c["state"], c["front"]
             t = c["t"]
             cnt = dict(c["counters"])
+            busy0 = c["exec_busy"] if compute is not None else None
             nact_agg, prio_agg = Scheduler.aggregate_worklist(
-                c["b_nactive"], c["b_prio"])
+                c["b_nactive"], c["b_prio"], cfg.agg_fairness)
 
             # ---- 1. async I/O completions ------------------------------
             comp = sched.complete_io(c["b_state"], c["b_deadline"],
@@ -929,9 +1046,11 @@ class Engine:
             b_state, b_deadline = pre.b_state, pre.b_deadline
             used_slots = pre.used_slots
 
-            # ---- 3. ONE pull for the whole batch -----------------------
+            # ---- 3. ONE pull for the whole batch (compute-gated) -------
+            pull_nact = nact_agg if compute is None else \
+                jnp.where(busy0 == 0, nact_agg, 0)
             eidx, lane_valid, b_used = sched.pull(
-                b_state, nact_agg,
+                b_state, pull_nact,
                 PullView(b_stamp=b_stamp, b_prio=prio_agg,
                          b_used=c["b_used"], t=t))
 
@@ -939,6 +1058,12 @@ class Engine:
             res = executor.execute_many(algo, state, front, eidx,
                                         lane_valid)
             state = res.state
+            if compute is not None:
+                lane_cost = compute.cost_ticks(self.t_b_edges[eidx])
+                cost = jnp.max(jnp.where(lane_valid, lane_cost, 0))
+                busy1 = jnp.where(jnp.any(lane_valid),
+                                  jnp.maximum(cost - 1, 0),
+                                  jnp.maximum(busy0 - 1, 0))
 
             # ---- 5. per-query frontier update + reuse accounting -------
             front2 = (front & ~res.processed) | res.activated
@@ -995,9 +1120,14 @@ class Engine:
                                                 reuse_q)
             cnt["blocks_reused"] = _c64_add(cnt["blocks_reused"],
                                             fin.blocks_reused)
-            cnt["exec_idle_ticks"] = _c64_add(
-                cnt["exec_idle_ticks"],
-                ((lanes_used == 0) & jnp.any(front2)).astype(i32))
+            idle = (lanes_used == 0) & jnp.any(front2)
+            if compute is not None:
+                idle &= busy0 == 0
+                cnt["exec_busy_ticks"] = _c64_add(
+                    cnt["exec_busy_ticks"],
+                    ((busy0 > 0) | jnp.any(lane_valid)).astype(i32))
+            cnt["exec_idle_ticks"] = _c64_add(cnt["exec_idle_ticks"],
+                                              idle.astype(i32))
             io_active = (comp.inflight + pre.io_ops > 0).astype(i32)
             occ = pre.inflight + pre.io_ops
             cnt["io_active_ticks"] = _c64_add(cnt["io_active_ticks"],
@@ -1040,16 +1170,151 @@ class Engine:
                          counters=cnt, trace=trace)
             if incremental:
                 out_c["v_prio"] = v_prio2
+            if compute is not None:
+                out_c["exec_busy"] = busy1
             return out_c
 
-        out = jax.lax.while_loop(cond, tick, carry0)
-        trace = out["trace"]
-        if cfg.trace:
-            # one shared schedule -> one trace, replicated per query so
-            # run_batch's per-query decode applies unchanged
-            trace = {k: jnp.broadcast_to(v[None, :], (Q, TRACE_LEN))
-                     for k, v in trace.items()}
-        return out["state"], out["counters"], trace
+        return tick
+
+    # ------------------------------------------------------------------
+    # continuous-serving hooks: open-ended carry, admit / retire
+    # ------------------------------------------------------------------
+
+    #: aggregated-plane carry leaves with a leading Q axis (everything
+    #: else is the ONE shared control plane); the serving layer's
+    #: capacity resize gathers/pads exactly these and carries the
+    #: shared leaves through unchanged. ``v_prio`` only exists under
+    #: refresh='incremental'.
+    AGG_PER_QUERY_KEYS = ("state", "front", "b_nactive", "b_prio",
+                          "v_prio", "counters")
+
+    def service_fns(self, algo: Algorithm, Q: int, mode: str) -> dict:
+        """Compiled single-tick serving functions for a Q-capacity batch.
+
+        The continuous service (:class:`repro.core.serving.
+        ContinuousService`) never drains, so it cannot live inside one
+        ``while_loop``; instead the host loop calls these per tick:
+
+          * ``carry0(fronts0, states0) -> carry`` — a fresh Q-capacity
+            carry (all-dead rows when the fronts are empty);
+          * ``step(carry) -> (carry', pending[Q], used_slots)`` — ONE
+            engine tick, the exact batch-plane step body (per-query
+            plane: alive-masked solo ticks + shared-I/O split;
+            aggregated plane: the merged-schedule tick), plus each
+            row's liveness and the post-tick pool occupancy for the
+            host's retirement / budget decisions;
+          * ``admit(carry, q, front0, state0) -> carry`` — stack a
+            fresh query into row ``q`` at a tick boundary. Per-query
+            plane: the row becomes the solo tick-0 carry verbatim, so
+            everything after is bit-identical to a solo run no matter
+            when it was admitted. Aggregated plane: only the per-query
+            leaves are replaced and the shared block states are
+            re-activated against the new cross-query refcount
+            (:meth:`Scheduler.reactivate_on_admit`) — the newcomer's
+            blocks wake without disturbing the running schedule.
+            Admitting an all-False frontier resets the row to dead,
+            which is how the per-query plane retires;
+          * ``retire(carry, q) -> carry`` (aggregated only) — clear the
+            row's frontier/worklist and release residency no live query
+            needs (:meth:`Scheduler.reclaim_idle`), so a service that
+            never drains gives slots back at retirement instead of
+            ratcheting the shared pool full.
+
+        Compiled once per ``(Q, mode, name, params, cfg)`` and cached —
+        admissions and retirements at a given capacity never recompile;
+        capacity changes (the serving layer's power-of-two ladder) do.
+        """
+        key = ("svc", mode, Q, algo.name, algo.params, self.cfg)
+        if key in self._compiled:
+            return self._compiled[key]
+        if mode not in ("per_query", "aggregated"):
+            raise ValueError(
+                f"unknown batch_mode {mode!r}; "
+                "available: ['aggregated', 'per_query']")
+        if mode == "aggregated" and not aggregation_eligible(algo):
+            raise ValueError(
+                f"algorithm {algo.name!r} is not schedule-independent; "
+                "serve it on the per-query plane (see Engine.run_batch)")
+        i32 = jnp.int32
+        sched = self.scheduler
+        incremental = self.cfg.refresh == "incremental"
+
+        if mode == "aggregated":
+            pool = self._agg_pool(Q)
+            tick = self._agg_tick_fn(algo, pool)
+
+            def step(c):
+                c2 = tick(c)
+                return c2, jnp.any(c2["front"], axis=-1), \
+                    c2["used_slots"]
+
+            def carry0(fronts0, states0):
+                return self._agg_carry0(algo, fronts0, states0)
+
+            def admit(c, q, front0, state0):
+                front0 = front0 & self.t_is_real
+                nact0, prio0 = sched.refresh(algo, state0, front0)
+                z = jnp.zeros((), jnp.uint32)
+                # the row's counters restart at admission: on this
+                # plane schedule counters are the shared schedule's,
+                # so a row measures the schedule DURING its residency
+                row = dict(
+                    state=state0, front=front0,
+                    b_nactive=nact0, b_prio=prio0,
+                    counters={k: (z, z)
+                              for k in _COUNTERS + _SHARED_COUNTERS})
+                if incremental:
+                    row["v_prio"] = algo.priority(
+                        state0, self.t_v_deg).astype(i32)
+                sub = jax.tree_util.tree_map(
+                    lambda full, r: full.at[q].set(r),
+                    {k: c[k] for k in row}, row)
+                c = dict(c, **sub)
+                nact_agg = jnp.sum(c["b_nactive"], axis=0)
+                b_state, b_stamp = sched.reactivate_on_admit(
+                    c["b_state"], c["b_stamp"], nact_agg, c["t"])
+                return dict(c, b_state=b_state, b_stamp=b_stamp)
+
+            def retire(c, q):
+                front = c["front"].at[q].set(False)
+                b_nactive = c["b_nactive"].at[q].set(0)
+                nact_agg = jnp.sum(b_nactive, axis=0)
+                b_state, used_slots = sched.reclaim_idle(
+                    c["b_state"], c["used_slots"], nact_agg, pool)
+                return dict(c, front=front, b_nactive=b_nactive,
+                            b_state=b_state, used_slots=used_slots)
+        else:
+            batch_step = self._batch_step_fn(algo)
+
+            def step(c):
+                c2 = batch_step(c)
+                return c2, self._batch_alive(c2), \
+                    jnp.sum(c2["used_slots"])
+
+            def carry0(fronts0, states0):
+                return self._batch_carry0(algo, fronts0, states0)
+
+            def admit(c, q, front0, state0):
+                front0 = front0 & self.t_is_real
+                row = self._initial_carry(algo, front0, state0)
+                z = jnp.zeros((), jnp.uint32)
+                cnt = dict(row["counters"])
+                for k in _SHARED_COUNTERS:
+                    cnt[k] = (z, z)
+                row = dict(row, counters=cnt)
+                return jax.tree_util.tree_map(
+                    lambda full, r: full.at[q].set(r), c, row)
+
+            # per-query retirement IS an admit of the empty query: the
+            # row resets to a dead tick-0 carry (all-INACTIVE block
+            # states), which also zeroes its private pool accounting
+            retire = None
+
+        fns = dict(carry0=jax.jit(carry0), step=jax.jit(step),
+                   admit=jax.jit(admit),
+                   retire=None if retire is None else jax.jit(retire))
+        self._compiled[key] = fns
+        return fns
 
 
 # ----------------------------------------------------------------------

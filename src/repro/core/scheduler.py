@@ -588,8 +588,15 @@ class Scheduler:
         return count(phys), spans(phys), count(shared), spans(shared)
 
     # ---- cross-query worklist: aggregated pull order -----------------
+
+    #: progress-fairness priority band width: each query's rebased
+    #: priorities are clipped into [1, FAIRNESS_BAND] and queries are
+    #: stacked in disjoint bands by remaining work, so Q * band must
+    #: stay well inside int32 (2**20 leaves room for Q up to ~2000)
+    FAIRNESS_BAND = 1 << 20
+
     @staticmethod
-    def aggregate_worklist(b_nactive, b_prio):
+    def aggregate_worklist(b_nactive, b_prio, fairness: str = "none"):
         """Merge Q per-query worklists into ONE (aggregated batch mode).
 
         ``b_nactive[q, b]`` / ``b_prio[q, b]`` — query ``q``'s per-block
@@ -609,6 +616,21 @@ class Scheduler:
             same magnitude. Blocks with no active query get ``NEG_INF``
             so preload/pull skip them.
 
+        ``fairness="progress"`` additionally weights the merge by
+        per-query *progress* so a huge-frontier query cannot starve a
+        near-done one (the mid-flight-admission hazard: a freshly
+        admitted query's giant frontier would otherwise monopolize the
+        shared pull order for the whole tail of an almost-finished
+        query). Queries are ranked by ascending remaining active-vertex
+        count; each query's rebased priorities are clipped into
+        ``[1, FAIRNESS_BAND]`` and offset by ``(Q-1-rank) * band``,
+        placing every query in its own disjoint priority band.
+        **Fairness bound** (asserted in ``test_aggregated.py``): every
+        block the least-remaining query has work in strictly outranks
+        every block it does not — the near-done query's tail is always
+        at the front of the merged preload/pull order, so it finishes
+        within its own solo tail length regardless of co-runners.
+
         Legal only for schedule-independent algorithms (see
         ``api.aggregation_eligible``): the merged order is *some* valid
         async order for each query, so every per-query fixed point is
@@ -623,8 +645,61 @@ class Scheduler:
                        keepdims=True)
         reb = jnp.where(active,
                         b_prio - jnp.where(has, pmin, 0) + 1, NEG_INF)
+        if fairness == "progress":
+            band = Scheduler.FAIRNESS_BAND
+            Q = b_nactive.shape[0]
+            remaining = jnp.sum(b_nactive, axis=1)        # [Q]
+            # queries with NO work sort last (their rows are NEG_INF
+            # anyway); ties break by query index via stable argsort
+            order = jnp.argsort(jnp.where(remaining > 0, remaining,
+                                          imax), stable=True)
+            rank = jnp.argsort(order, stable=True)        # [Q]
+            boost = ((Q - 1 - rank) * band).astype(i32)
+            reb = jnp.where(active,
+                            jnp.clip(reb, 1, band) + boost[:, None],
+                            NEG_INF)
+        elif fairness != "none":
+            raise ValueError(
+                f"unknown fairness {fairness!r}; "
+                "available: ['none', 'progress']")
         prio_agg = jnp.max(reb, axis=0).astype(i32)
         return nact_agg, prio_agg
+
+    # ---- continuous-serving hooks: admission / retirement ------------
+    def reactivate_on_admit(self, b_state, b_stamp, nact_agg, t):
+        """Wake the blocks a mid-flight admission's frontier activates.
+
+        A query admitted into a RUNNING batch lands between ticks, so
+        the shared block states were computed against the *old* merged
+        worklist: blocks the newcomer needs may sit INACTIVE. This is
+        the admission-time counterpart of the tick's stage-8
+        :meth:`activate` — INACTIVE blocks with work under the new
+        cross-query refcount re-enter the preload queue (UNCACHED) or
+        the cached queue directly (zero-I/O pseudo-blocks). Blocks
+        already UNCACHED/LOADING/CACHED are untouched: an in-flight or
+        resident copy serves the newcomer as shared I/O, exactly like
+        any other cross-query hit.
+        """
+        return self.activate(b_state, b_stamp, nact_agg, t)
+
+    def reclaim_idle(self, b_state, used_slots, nact_agg,
+                     pool: BufferPool):
+        """Release residency no live query needs (retirement hook).
+
+        In a drain-to-idle batch, a retired query's CACHED blocks stay
+        resident harmlessly — the loop ends soon. A continuous service
+        never drains, so retirement must give slots back or the shared
+        pool ratchets full and admission of the *next* query starves.
+        Releases CACHED blocks whose cross-query active refcount is
+        zero (→ INACTIVE; stage-8 activation re-admits them if a later
+        query wakes them). Runs only at retirement events, not per
+        tick, so mid-run reuse residency (``blocks_reused``) is
+        unaffected. Returns ``(b_state, used_slots)``.
+        """
+        released = (b_state == S_CACHED) & (nact_agg == 0)
+        b_state = jnp.where(released, S_INACTIVE, b_state)
+        used_slots = pool.release(used_slots, released)
+        return b_state, used_slots
 
     # ---- stage 7: finish / reactivation / eviction -------------------
     def finish(self, b_state, b_stamp, b_reuse, b_nactive2, eidx,

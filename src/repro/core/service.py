@@ -42,27 +42,60 @@ from __future__ import annotations
 
 from typing import Any
 
-from repro.core.api import Query, QueryBatch
+from repro.core.api import Query, QueryBatch, QueryState
 from repro.core.session import BatchResult, GraphSession, RunResult
 
 
 class QueryHandle:
-    """Ticket for one submitted query; resolved by the next ``drain``."""
+    """Ticket for one submitted query.
 
-    __slots__ = ("query", "_result")
+    Resolved by the next ``GraphService.drain()`` — or, under
+    :class:`~repro.core.serving.ContinuousService`, retired mid-flight
+    as soon as its batch row converges. ``state`` walks the
+    :class:`~repro.core.api.QueryState` lifecycle; the three ``*_tick``
+    fields are service-clock stamps (continuous service only; ``None``
+    under drain-style service, which has no clock):
+
+    * ``submit_tick`` — when ``submit()`` enqueued the query,
+    * ``admit_tick`` — when it joined a running batch (admission),
+    * ``retire_tick`` — when its row converged and was compacted out.
+
+    ``retire_tick - submit_tick`` is the modeled end-to-end latency in
+    service ticks (queue wait + execution); ``retire_tick -
+    admit_tick`` is the execution part alone.
+    """
+
+    __slots__ = ("query", "_result", "state",
+                 "submit_tick", "admit_tick", "retire_tick")
 
     def __init__(self, query: Query):
         self.query = query
         self._result: RunResult | None = None
+        self.state: str = QueryState.PENDING
+        self.submit_tick: int | None = None
+        self.admit_tick: int | None = None
+        self.retire_tick: int | None = None
 
     @property
     def done(self) -> bool:
         return self._result is not None
 
+    @property
+    def latency_ticks(self) -> int | None:
+        """End-to-end modeled latency (submit → retire), service ticks."""
+        if self.retire_tick is None or self.submit_tick is None:
+            return None
+        return self.retire_tick - self.submit_tick
+
+    def _resolve(self, result: RunResult) -> None:
+        self._result = result
+        self.state = QueryState.DONE
+
     def result(self) -> RunResult:
         if self._result is None:
             raise RuntimeError(
-                "query not drained yet — call GraphService.drain() first")
+                "query not finished yet — call drain() (or step the "
+                "ContinuousService) first")
         return self._result
 
 
@@ -142,9 +175,9 @@ class GraphService:
                     batch, algos=[a for _, a in pairs])
                 self.last_batches.append(bres)
                 for h, r in zip(handles, bres.results):
-                    h._result = r
+                    h._resolve(r)
             for h in solo:
-                h._result = self.session.run(h.query)
+                h._resolve(self.session.run(h.query))
         finally:
             # a failing query must not take the rest of the queue with
             # it: only resolved handles leave the pending list, so a

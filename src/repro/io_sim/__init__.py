@@ -1,5 +1,7 @@
 from repro.io_sim.aio import AsyncLoader
+from repro.io_sim.compute import ComputeModel
 from repro.io_sim.device import DeviceModel, UniformDevice
 from repro.io_sim.ssd_model import SSDModel
 
-__all__ = ["AsyncLoader", "DeviceModel", "SSDModel", "UniformDevice"]
+__all__ = ["AsyncLoader", "ComputeModel", "DeviceModel", "SSDModel",
+           "UniformDevice"]

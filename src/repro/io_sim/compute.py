@@ -1,0 +1,66 @@
+"""Compute-time model that *drives* the engine's executor schedule.
+
+Symmetric to :mod:`repro.io_sim.device`: where the device model turned
+block reads from a constant ``io_latency`` into span-proportional
+completion deadlines (PR 2), this module does the same for the
+*executor* side of the tick. Until this PR every pull charged exactly
+one tick regardless of edge mass, so a hub block with 10^5 edges and a
+leaf block with 10 cost the same — compute-bound stalls could never
+appear in the schedule or in ``modeled_runtime``, which made service
+SLOs from the tick clock dishonest for compute-heavy algorithms.
+
+With ``EngineConfig.compute`` set, each tick's pulled lane set charges
+
+    cost = max over pulled lanes of ceil(edge_mass(block) / edges_per_tick)
+
+ticks of executor occupancy (lanes run in parallel — the slowest lane
+gates the batch, matching the device model's per-request channel
+striping). While the executor is busy (``cost > 1`` carrying over), the
+scheduler keeps completing and submitting I/O — the pipeline overlap
+the paper's Sec. 4 claims — but *pull* is gated off, so compute-bound
+runs visibly stretch in ticks. Busy occupancy is measured into the new
+``Metrics.exec_busy_ticks`` counter, which
+:meth:`repro.io_sim.ssd_model.SSDModel.compute_seconds` converts to
+seconds alongside the analytic edges/s estimate.
+
+``ComputeModel(edges_per_tick=0)`` (or leaving ``EngineConfig.compute``
+as ``None``) reproduces the 1-tick-per-pull schedule bit-for-bit.
+
+Frozen dataclass so an :class:`~repro.core.engine.EngineConfig`
+embedding one stays hashable (the engine's compile cache keys on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Edge-mass-proportional executor occupancy.
+
+    ``edges_per_tick`` is the per-lane relax throughput in edges per
+    scheduler tick (higher = faster executor); ``0`` degenerates to the
+    legacy constant 1-tick cost. The calibration that maps it onto
+    wall-clock seconds lives in :class:`~repro.io_sim.ssd_model.
+    SSDModel` (``edges_per_sec_per_lane`` over ``tick_seconds``).
+    """
+
+    edges_per_tick: int = 4096
+
+    def cost_ticks(self, edge_mass: jnp.ndarray) -> jnp.ndarray:
+        """Executor ticks one lane needs for a block (int32, >= 1)."""
+        ept = int(self.edges_per_tick)
+        if ept <= 0:
+            return jnp.ones_like(edge_mass)
+        return jnp.maximum((edge_mass + ept - 1) // ept, 1)
+
+    @classmethod
+    def from_rates(cls, edges_per_sec_per_lane: float,
+                   tick_seconds: float) -> "ComputeModel":
+        """Build from an :class:`SSDModel`-style calibration: the edge
+        throughput one lane sustains, quantized to whole edges per tick
+        (floor 1 so a tick always makes progress)."""
+        return cls(edges_per_tick=max(
+            1, int(edges_per_sec_per_lane * tick_seconds)))

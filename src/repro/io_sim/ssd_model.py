@@ -51,11 +51,38 @@ class SSDModel:
         return DeviceModel.from_bandwidth(self.bandwidth_gbps,
                                           channels=channels)
 
+    @property
+    def tick_seconds(self) -> float:
+        """Wall-clock seconds one scheduler tick models.
+
+        Anchored to the same reference as :meth:`device`: the reference
+        6 GB/s device services one 4 KB slot per tick per channel, so a
+        tick is one slot's service time at this SSD's bandwidth. The
+        serving layer uses this to convert admission-to-retirement tick
+        latencies into modeled seconds."""
+        return self.block_bytes / (self.bandwidth_gbps * 1e9)
+
+    def compute(self) -> "ComputeModel":
+        """Tick-domain compute model calibrated to this SSD's executor
+        rate — the symmetric counterpart of :meth:`device`, for
+        ``EngineConfig(compute=...)``."""
+        from repro.io_sim.compute import ComputeModel
+        return ComputeModel.from_rates(self.edges_per_sec_per_lane,
+                                       self.tick_seconds)
+
     def io_seconds(self, m: Metrics) -> float:
         return m.io_bytes / (self.bandwidth_gbps * 1e9)
 
     def compute_seconds(self, m: Metrics) -> float:
-        return m.edges_scanned / (self.edges_per_sec_per_lane * self.lanes)
+        """Executor time: the analytic edges/s estimate, or — when the
+        engine ran with a :class:`~repro.io_sim.compute.ComputeModel`
+        (``Metrics.exec_busy_ticks`` > 0) — the *measured* executor
+        occupancy converted through the tick clock, whichever is
+        larger (the measured figure includes per-pull quantization the
+        analytic rate undercounts)."""
+        analytic = m.edges_scanned / (self.edges_per_sec_per_lane
+                                      * self.lanes)
+        return max(analytic, m.exec_busy_ticks * self.tick_seconds)
 
     def overlap_fraction(self, m: Metrics) -> float:
         """Measured share of the schedule during which the *smaller*

@@ -7,12 +7,36 @@ tests and benchmarks must see the single real CPU device. Only
 from __future__ import annotations
 
 import collections
+import os
 
 import numpy as np
 import pytest
 
 from repro.storage.csr import CSRGraph, from_edges, symmetrize
 from repro.storage.rmat import rmat_graph
+
+
+# ----------------------------------------------------------------------
+# collection guard: the property suite must not silently vanish in CI
+# ----------------------------------------------------------------------
+# `pip install -e '.[test]'` is the documented default dev install (see
+# README "Running the tests"); without the extra, test_property.py
+# self-skips via importorskip("hypothesis"). That is fine on a laptop
+# but a silent coverage hole in CI, so when CI (or
+# REPRO_REQUIRE_HYPOTHESIS=1) is set, a collection that yields zero
+# property tests fails the run loudly instead of reporting green.
+
+def pytest_collection_modifyitems(config, items):
+    if not (os.environ.get("CI")
+            or os.environ.get("REPRO_REQUIRE_HYPOTHESIS")):
+        return
+    prop = [it for it in items
+            if os.path.basename(str(it.fspath)) == "test_property.py"]
+    if not prop:
+        raise pytest.UsageError(
+            "CI collected 0 tests from test_property.py — hypothesis "
+            "is missing, so the property suite silently self-skipped. "
+            "Install the test extra: pip install -e '.[test]'")
 
 
 # ----------------------------------------------------------------------

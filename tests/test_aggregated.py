@@ -196,6 +196,73 @@ def test_service_routes_batches_by_eligibility():
 
 
 # ----------------------------------------------------------------------
+# progress fairness: the merged pull order cannot starve a near-done
+# query (the mid-flight-admission hazard on the shared schedule)
+# ----------------------------------------------------------------------
+
+def test_progress_fairness_bound():
+    """The documented bound: under ``fairness='progress'`` every block
+    the least-remaining query has work in strictly outranks every block
+    it does not — its tail always heads the merged preload/pull order."""
+    from repro.core import Scheduler
+    rng = np.random.default_rng(7)
+    Q, B = 5, 64
+    nact = rng.integers(0, 4, size=(Q, B)).astype(np.int32)
+    nact[3] = 0
+    nact[3, 17] = 1                      # near-done: one block left
+    nact[1] *= 40                        # fresh admission: huge frontier
+    prio = rng.integers(-1000, 1000, size=(Q, B)).astype(np.int32)
+    _, prio_agg = Scheduler.aggregate_worklist(nact, prio,
+                                               fairness="progress")
+    prio_agg = np.asarray(prio_agg)
+    remaining = nact.sum(axis=1)
+    qstar = int(np.argmin(np.where(remaining > 0, remaining, 2 ** 31)))
+    assert qstar == 3
+    mine = nact[qstar] > 0
+    others = ~mine & (nact.sum(axis=0) > 0)
+    assert prio_agg[mine].min() > prio_agg[others].max(), \
+        "near-done query's blocks must strictly outrank all others"
+    # sanity: the unweighted merge does NOT have this property here
+    _, plain = Scheduler.aggregate_worklist(nact, prio)
+    plain = np.asarray(plain)
+    assert plain[mine].min() <= plain[others].max()
+
+
+def test_progress_fairness_preserves_fixed_point():
+    """Fairness only reorders the (schedule-independent) merge — every
+    member still reaches its solo fixed point, on both refresh paths."""
+    queries = tuple(BFS(s) for s in SOURCES[:4])
+    g = _graph(False)
+    res = make_session(g, agg_fairness="progress",
+                       **AGG).run(QueryBatch(queries))
+    assert res.batch_mode == "aggregated"
+    solo = make_session(g)
+    for r, q in zip(res.results, queries):
+        assert np.array_equal(r.result, solo.run(q).result)
+
+
+def test_progress_fairness_in_continuous_service():
+    """Mid-flight admission into a RUNNING aggregated group under the
+    fairness weighting: the part-done query's tail keeps its place in
+    the merged pull order and both reach solo fixed points."""
+    from repro.core import ContinuousService, ServeConfig
+    g = _graph(False)
+    sess = make_session(g, agg_fairness="progress", **AGG)
+    solo = make_session(g)
+    svc = ContinuousService(GraphSession.from_engine(sess.engine),
+                            serve=ServeConfig(initial_capacity=2,
+                                              max_capacity=4))
+    hb = svc.submit(BFS(0))
+    for _ in range(3):
+        svc.step()
+    hc = svc.submit(BFS(50))    # fresh frontier joins the same group
+    svc.run_until_idle()
+    assert np.array_equal(hb.result().result, solo.run(BFS(0)).result)
+    assert np.array_equal(hc.result().result, solo.run(BFS(50)).result)
+    assert svc.stats()["midflight_admissions"] == 1
+
+
+# ----------------------------------------------------------------------
 # config validation
 # ----------------------------------------------------------------------
 
@@ -209,6 +276,8 @@ def test_config_validation():
         make_session(g, pool_mode="shared")    # without aggregated
     with pytest.raises(ValueError, match="per-query plane"):
         make_session(g, sync=True, **AGG)
+    with pytest.raises(ValueError, match="unknown agg_fairness"):
+        make_session(g, agg_fairness="bogus")
     sess = make_session(g)
     fronts, states = lift_init((BFS(0).build(),), sess.ctx)
     with pytest.raises(ValueError, match="unknown batch_mode"):

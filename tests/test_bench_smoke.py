@@ -11,9 +11,10 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 def test_bench_smoke_writes_trajectory_point():
     out = ROOT / "BENCH_smoke.json"
     mq_out = ROOT / "BENCH_multi_query.json"
+    svc_out = ROOT / "BENCH_service.json"
     proc = subprocess.run(
         [sys.executable, str(ROOT / "tools" / "bench_smoke.py"),
-         str(out), str(mq_out)],
+         str(out), str(mq_out), str(svc_out)],
         capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stderr[-2000:]
     data = json.loads(out.read_text())
@@ -46,3 +47,21 @@ def test_bench_smoke_writes_trajectory_point():
     # every timed multi-query row here carries a real measurement
     assert all(r["us_per_call"] > 0 for r in mq["results"]
                if "us_per_call" in r)
+    # serving-SLO smoke: the Poisson scenarios ran, each demonstrated
+    # at least one mid-flight admission with zero idle-barrier ticks
+    # (the in-bench gates raise on identity/conservation/monotonicity
+    # violations, so green rows imply those held), and the rows landed
+    # in the dedicated service artifact
+    svc = json.loads(svc_out.read_text())
+    assert svc["failures"] == 0
+    svc_names = {r["name"] for r in svc["results"]}
+    assert svc_names == {n for n in names if n.startswith("service_")}
+    assert any(n.startswith("service_bfs_poisson") for n in svc_names)
+    assert any(n.startswith("service_bfs_agg_poisson")
+               for n in svc_names)
+    assert any(n.startswith("service_hetero_poisson")
+               for n in svc_names)
+    for r in svc["results"]:
+        assert "_midflight_0_" not in r["derived"], r
+        assert "_idle_barriers_0" in r["derived"], r
+        assert r["us_per_call"] > 0

@@ -246,7 +246,7 @@ def test_graph_service_drains_in_submission_order():
     handles = [svc.submit(q) for q in queries]
     assert svc.pending == len(queries)
     assert not handles[0].done
-    with pytest.raises(RuntimeError, match="not drained"):
+    with pytest.raises(RuntimeError, match="not finished"):
         handles[0].result()
     results = svc.drain()
     assert svc.pending == 0

@@ -3,15 +3,17 @@
 
 Runs a tiny-graph subset of the benchmark suite (Fig. 10 read inflation
 + the device sweep + the bucketed tick-cost sweep + the PR-5
-multi-query Q=4 PPR point) and writes ``BENCH_smoke.json`` at the repo
-root, so every PR commits one perf trajectory point instead of an empty
-history — with real measured ``us_per_call`` wall clock (warm-compiled
-best-of-N) since PR 4. The ``multiq_*`` rows are additionally split out
-into ``BENCH_multi_query.json`` so CI can track/upload the
-concurrent-plane trajectory as its own artifact. Wired into tier-1 as a
+multi-query Q=4 PPR point + the continuous-service SLO scenarios) and
+writes ``BENCH_smoke.json`` at the repo root, so every PR commits one
+perf trajectory point instead of an empty history — with real measured
+``us_per_call`` wall clock (warm-compiled best-of-N) since PR 4. The
+``multiq_*`` rows are additionally split out into
+``BENCH_multi_query.json`` and the ``service_*`` rows into
+``BENCH_service.json`` so CI can track/upload the concurrent-plane and
+serving-SLO trajectories as their own artifacts. Wired into tier-1 as a
 non-slow test via ``tests/test_bench_smoke.py``.
 
-Usage: python tools/bench_smoke.py [OUT.json [MULTIQ_OUT.json]]
+Usage: python tools/bench_smoke.py [OUT.json [MULTIQ_OUT.json [SERVICE_OUT.json]]]
 """
 from __future__ import annotations
 
@@ -30,6 +32,20 @@ sys.path.insert(0, str(ROOT))          # benchmarks package
 sys.path.insert(0, str(ROOT / "src"))  # repro package
 
 
+def _split(data: dict, prefix: str, module: str,
+           path: pathlib.Path) -> None:
+    """One bench pass, several artifacts: rows with ``prefix`` land in
+    their own JSON. The artifact's failure flag is its MODULE's own
+    status (run.py records module_seconds only on success), not the
+    suite-global count — an unrelated module's crash must not be pinned
+    on this artifact's subsystem."""
+    import json
+    rows = [r for r in data["results"] if r["name"].startswith(prefix)]
+    failed = module not in data.get("module_seconds", {})
+    path.write_text(json.dumps(
+        {"results": rows, "failures": int(failed)}, indent=1))
+
+
 def main() -> None:
     import json
 
@@ -38,37 +54,29 @@ def main() -> None:
         else str(ROOT / "BENCH_smoke.json")
     mq_out = sys.argv[2] if len(sys.argv) > 2 \
         else str(ROOT / "BENCH_multi_query.json")
+    svc_out = sys.argv[3] if len(sys.argv) > 3 \
+        else str(ROOT / "BENCH_service.json")
     sys.argv = ["bench_smoke", "--only",
-                "fig10,device_sweep,tick_cost,multi_query",
+                "fig10,device_sweep,tick_cost,multi_query,service",
                 "--json", out]
     # remove previous outputs first: a crashed bench run must leave NO
     # json (so CI fails loudly) rather than re-splitting the stale
     # committed files as if they were this run's data
-    out_p, mq_p = pathlib.Path(out), pathlib.Path(mq_out)
-    out_p.unlink(missing_ok=True)
-    mq_p.unlink(missing_ok=True)
+    out_p = pathlib.Path(out)
+    mq_p, svc_p = pathlib.Path(mq_out), pathlib.Path(svc_out)
+    for p in (out_p, mq_p, svc_p):
+        p.unlink(missing_ok=True)
     try:
         bench_main()
     finally:
-        # one bench pass, two artifacts: the multiq rows also land in
-        # their own JSON for the dedicated CI artifact. run.py writes
-        # the json before exiting non-zero on benchmark failures, so a
-        # failures>0 run still gets a fresh (failure-recording) split;
-        # if no json was written the original exception propagates
-        # unmasked and neither file exists
+        # run.py writes the json before exiting non-zero on benchmark
+        # failures, so a failures>0 run still gets fresh
+        # (failure-recording) splits; if no json was written the
+        # original exception propagates unmasked and no file exists
         if out_p.exists():
             data = json.loads(out_p.read_text())
-            rows = [r for r in data["results"]
-                    if r["name"].startswith("multiq_")]
-            # the artifact's failure flag is the multi_query MODULE's
-            # own status (run.py records module_seconds only on
-            # success), not the suite-global count — an unrelated
-            # module's crash must not be pinned on the concurrent plane
-            mq_failed = "multi_query" not in data.get("module_seconds",
-                                                      {})
-            mq_p.write_text(json.dumps(
-                {"results": rows, "failures": int(mq_failed)},
-                indent=1))
+            _split(data, "multiq_", "multi_query", mq_p)
+            _split(data, "service_", "service", svc_p)
 
 
 if __name__ == "__main__":
